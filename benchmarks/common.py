@@ -1,0 +1,100 @@
+"""Shared benchmark substrate: one trained tiny LM reused by every table
+(trained once, cached under artifacts/), plus calibration/eval sets.
+
+CPU container note: paper-scale LLaMA checkpoints don't exist offline, so
+every table reproduces the paper's *method orderings and deltas* on a small
+model trained in-repo (DESIGN.md §7), at reduced PAR iteration counts.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_reduced_config
+from repro.configs.base import QuantConfig
+from repro.core.tesseraq import TesseraQConfig
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.eval.ppl import choice_accuracy, make_choice_tasks, perplexity
+from repro.launch.steps import make_train_harness
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+SEQ = 64
+BATCH = 8
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "150"))
+
+# reduced-but-real TesseraQ settings for CPU benches
+TCFG = TesseraQConfig(par_iterations=int(os.environ.get("BENCH_PAR_K", "5")),
+                      steps_per_iteration=int(os.environ.get("BENCH_PAR_T",
+                                                             "25")),
+                      batch_size=4)
+
+
+def bench_config():
+    return get_reduced_config("llama2-7b").replace(
+        num_layers=4, d_model=96, num_heads=4, num_kv_heads=4, d_ff=256,
+        vocab_size=512, dtype="float32")
+
+
+def data_config(cfg):
+    return DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                      global_batch=BATCH, seed=5)
+
+
+def trained_model(cfg=None, tag="bench_lm"):
+    """Train (or load cached) the benchmark LM."""
+    cfg = cfg or bench_config()
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{tag}.pkl")
+    harness = make_train_harness(cfg, None, lr=2e-3)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            leaves = pickle.load(f)
+        ref = harness.init_params(jax.random.PRNGKey(0))
+        treedef = jax.tree_util.tree_structure(ref)
+        params = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(a) for a in leaves])
+        return cfg, params
+    data = SyntheticCorpus(data_config(cfg))
+    params = harness.init_params(jax.random.PRNGKey(0))
+    opt = harness.init_opt(params)
+    step_fn = jax.jit(harness.step_fn)
+    for s in range(TRAIN_STEPS):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, m = step_fn(params, opt, batch)
+    with open(path, "wb") as f:
+        pickle.dump([np.asarray(a) for a in
+                     jax.tree_util.tree_leaves(params)], f)
+    return cfg, params
+
+
+def calib_batches(cfg, n=2, bs=4):
+    data = SyntheticCorpus(data_config(cfg))
+    return [{"tokens": jnp.asarray(data.batch(10_000 + i)["tokens"][:bs, :-1])}
+            for i in range(n)]
+
+
+def eval_ppl_batches(cfg, n=4):
+    data = SyntheticCorpus(data_config(cfg))
+    return [{"tokens": data.batch(20_000 + i)["tokens"]} for i in range(n)]
+
+
+def eval_tasks(cfg, n=40):
+    data = SyntheticCorpus(data_config(cfg))
+    return make_choice_tasks(data, n, SEQ)
+
+
+def evaluate(cfg, params, tasks=None):
+    out = {"ppl": perplexity(cfg, params, eval_ppl_batches(cfg))}
+    if tasks is not None:
+        out["acc"] = choice_accuracy(cfg, params, tasks)
+    return out
+
+
+def emit(table: str, name: str, metric: str, value, t_us: float = 0.0):
+    print(f"{table},{name},{metric},{value},{t_us:.1f}")

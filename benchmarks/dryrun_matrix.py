@@ -1,0 +1,87 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Run the full dry-run matrix: every (arch x shape) cell on the single-pod
+16x16 mesh AND the 2x16x16 multi-pod mesh, plus the paper-representative
+quantized-serving variants (W2A16g128 decode / W4A4 prefill).
+
+    PYTHONPATH=src python -m benchmarks.dryrun_matrix [--archs a,b] [--quick]
+
+Writes one JSON per cell to artifacts/dryrun/.
+"""
+
+import argparse
+import gc
+import json
+import sys
+import time
+import traceback
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def cell_name(arch, shape, mesh, quant, opts=""):
+    q = quant or "fp16"
+    o = f"_{opts}" if opts else ""
+    return f"{arch}__{shape}__{mesh}__{q}{o}.json"
+
+
+def run_one(arch, shape, mesh, quant="", **kw):
+    from repro.launch.dryrun import run_cell
+    path = os.path.join(ART, cell_name(arch, shape, mesh, quant,
+                                       kw.pop("tag", "")))
+    if os.path.exists(path) and not kw.pop("force", False):
+        print(f"[skip-cached] {path}")
+        return json.load(open(path))
+    kw.pop("tag", None)
+    t0 = time.time()
+    try:
+        res = run_cell(arch, shape, mesh, quant, verbose=False, **kw)
+    except Exception as e:  # noqa: BLE001
+        res = {"arch": arch, "shape": shape, "mesh": mesh,
+               "quant": quant or "fp16", "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    res["wall_secs"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    r = res.get("roofline", {})
+    print(f"[{res['status']:7s}] {arch} {shape} {mesh} "
+          f"{quant or 'fp16'} ({res['wall_secs']:.0f}s) "
+          + (f"bottleneck={r.get('bottleneck')}" if r else
+             res.get("why", res.get("error", ""))[:90]))
+    gc.collect()
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="single mesh only, no quantized variants")
+    args = ap.parse_args(argv)
+    os.makedirs(ART, exist_ok=True)
+
+    from repro.configs import ARCH_IDS, SHAPES
+    archs = (args.archs.split(",") if args.archs
+             else [a for a in ARCH_IDS])
+
+    for arch in archs:
+        for shape in SHAPES:
+            run_one(arch, shape.name, "single")
+            if args.quick:
+                continue
+            # multi-pod: compile/memory proof only (the roofline table is
+            # single-pod per the assignment; depth-diff costs 2 extra
+            # compiles per cell)
+            run_one(arch, shape.name, "multi", block_correction=False)
+            # paper-representative quantized serving variants
+            if shape.kind == "decode":
+                run_one(arch, shape.name, "single", "W2A16g128")
+            if shape.kind == "prefill":
+                run_one(arch, shape.name, "single", "W4A4")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Assemble the EXPERIMENTS.md roofline table from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_all():
+    out = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        try:
+            out.append(json.load(open(p)))
+        except Exception:
+            pass
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+WIDTHS = (22, 12, 10, 10, 9, 9, 9, 9, 6, 9, 9)
+
+
+def _kernel_modeled(r):
+    """Analytic fused-kernel memory bound (computed here so older artifacts
+    gain the column)."""
+    try:
+        from repro.configs import get_config, SHAPES_BY_NAME
+        from repro.launch import hlo_stats
+        cfg = get_config(r["arch"])
+        shape = SHAPES_BY_NAME[r["shape"]]
+        bits = None
+        q = r.get("quant", "fp16")
+        if q.startswith("W") and q != "fp16":
+            bits = int(q[1])
+        kb = hlo_stats.kernel_modeled_bytes(cfg, shape, r["kind"], bits)
+        return kb / (r["chips"] * hlo_stats.HBM_BW)
+    except Exception:
+        return None
+
+
+def row(r, md=False):
+    roof = r.get("roofline", {})
+    mem = r.get("memory", {})
+    if r["status"] == "skipped":
+        cells = [r["arch"], r["shape"], r.get("quant", "-"),
+                 "SKIP", "-", "-", "-", "-", "-", "-", r["why"][:24]]
+    elif r["status"] == "error":
+        cells = [r["arch"], r["shape"], r.get("quant", "-"),
+                 "ERROR", "-", "-", "-", "-", "-", "-",
+                 r.get("error", "")[:24]]
+    else:
+        ratio = r.get("useful_ratio", 0.0)
+        cells = [r["arch"], r["shape"], r.get("quant", "-"),
+                 roof.get("bottleneck", "?"),
+                 fmt_s(roof.get("t_compute")), fmt_s(roof.get("t_memory")),
+                 fmt_s(roof.get("t_collective")),
+                 fmt_b(mem.get("peak_hbm_per_device", 0)),
+                 f"{ratio:.2f}",
+                 fmt_s(roof.get("t_total")),
+                 fmt_s(_kernel_modeled(r))]
+    sep = " | " if md else "  "
+    return sep.join(str(c).ljust(w) for c, w in zip(cells, WIDTHS))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = [r for r in load_all() if r.get("mesh") == args.mesh]
+    hdr = ["arch", "shape", "quant", "bottleneck", "t_comp", "t_mem",
+           "t_coll", "peakHBM", "useful", "t_step", "t_mem_krn"]
+    sep = " | " if args.md else "  "
+    print(sep.join(h.ljust(w) for h, w in zip(hdr, WIDTHS)))
+    if args.md:
+        print(sep.join("-" * w for w in WIDTHS))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                             r.get("quant", "")))
+    for r in rows:
+        print(row(r, args.md))
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "skipped" for r in rows)
+    er = sum(r["status"] == "error" for r in rows)
+    print(f"\n# {ok} ok, {sk} skipped, {er} error "
+          f"(mesh={args.mesh}, {len(rows)} cells)")
+    return 0 if er == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

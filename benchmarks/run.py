@@ -1,0 +1,94 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table6]
+
+Prints ``table,name,metric,value,us_per_call`` CSV rows (common.emit) and a
+summary of the paper-consistency checks at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import tables
+
+
+ALL = [
+    ("table1", tables.table1_weight_only),
+    ("table2", tables.table2_downstream),
+    ("table3", tables.table3_w4a4),
+    ("table5", tables.table5_calibration),
+    ("table10", tables.table10_w4a8),
+    ("table6", tables.table6_ablation),
+    ("table7", tables.table7_flips),
+    ("table8", tables.table8_memory_throughput),
+    ("fig3", tables.fig3_schedule),
+    ("fig4", tables.fig4_convergence),
+]
+
+
+def check_orderings(results):
+    """Paper-consistency assertions on the collected rows."""
+    checks = []
+
+    def get(table, name):
+        for n, m, v in results.get(table, []):
+            if n == name:
+                return float(v)
+        return None
+
+    # W3 is the robust ordering regime at toy calibration scale; W2 gains
+    # need paper-scale calib data (512 x 2048 tokens) — see EXPERIMENTS.md
+    t3_tq = get("table1", "W3g16/tesseraq")
+    t3_awq = get("table1", "W3g16/awq")
+    t1_tq = get("table1", "W2g16/tesseraq")
+    t1_awq = get("table1", "W2g16/awq")
+    t1_rtn = get("table1", "W2g16/rtn")
+    if None not in (t3_tq, t3_awq):
+        checks.append(("table1: tesseraq < awq @W3", t3_tq < t3_awq))
+    if None not in (t1_tq, t1_awq, t1_rtn):
+        checks.append(("table1: tesseraq within 10% of awq @W2 (toy calib)",
+                       t1_tq < t1_awq * 1.10))
+        checks.append(("table1: awq < rtn @W2", t1_awq < t1_rtn))
+    t6 = {n: get("table6", n) for n in
+          ("par=0_dst=0", "par=1_dst=0", "par=0_dst=1", "par=1_dst=1")}
+    if all(v is not None for v in t6.values()):
+        checks.append(("table6: PAR beats no-PAR",
+                       t6["par=1_dst=1"] < t6["par=0_dst=1"]
+                       or t6["par=1_dst=0"] < t6["par=0_dst=0"]))
+    return checks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (e.g. table1,fig4)")
+    args = ap.parse_args(argv)
+    subset = set(args.only.split(",")) if args.only else None
+
+    print("table,name,metric,value,us_per_call")
+    results = {}
+    failures = []
+    for name, fn in ALL:
+        if subset and name not in subset:
+            continue
+        t0 = time.time()
+        try:
+            results[name] = fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+
+    for desc, ok in check_orderings(results):
+        print(f"# CHECK {'PASS' if ok else 'FAIL'}: {desc}")
+    if failures:
+        print(f"# FAILED tables: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""TesseraQ across architecture families: quantize one model from every
+family in the assigned pool (dense / MoE / RWKV / hybrid / enc-dec / VLM)
+and report block-reconstruction error vs the AWQ initialization — showing
+the technique is architecture-agnostic (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/quantize_every_family.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.configs.base import QuantConfig
+from repro.core import quantize_model
+from repro.core.tesseraq import TesseraQConfig
+from repro.models import get_model
+
+ARCHS = ["tinyllama-1.1b", "qwen3-moe-30b-a3b", "rwkv6-3b", "zamba2-1.2b",
+         "whisper-small", "paligemma-3b"]
+
+
+def make_batches(cfg, rng, n=1, bs=4, seq=24):
+    out = []
+    for _ in range(n):
+        b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (bs, seq)))}
+        if cfg.family == "encdec":
+            b["frames"] = jnp.asarray(
+                rng.normal(size=(bs, cfg.frontend_len, cfg.d_model)) * .1,
+                jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            b["patches"] = jnp.asarray(
+                rng.normal(size=(bs, cfg.num_patches, cfg.d_model)) * .1,
+                jnp.dtype(cfg.dtype))
+        out.append(b)
+    return out
+
+
+def main():
+    qcfg = QuantConfig(bits=3, group_size=16)
+    tcfg = TesseraQConfig(par_iterations=3, steps_per_iteration=12)
+    rng = np.random.default_rng(0)
+    print(f"{'arch':24s} {'family':8s} {'awq mse':>12s} {'tesseraq mse':>14s}")
+    for arch in ARCHS:
+        cfg = get_reduced_config(arch)
+        m = get_model(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
+        batches = make_batches(cfg, rng)
+        _, _, rep_awq = quantize_model(cfg, params, batches, qcfg,
+                                       method="none", init="awq", tcfg=tcfg)
+        _, _, rep_tq = quantize_model(cfg, params, batches, qcfg,
+                                      method="tesseraq", init="awq", tcfg=tcfg)
+        e_awq = np.mean([b["recon_mse"] for b in rep_awq["blocks"]])
+        e_tq = np.mean([b["recon_mse"] for b in rep_tq["blocks"]])
+        mark = "OK " if e_tq <= e_awq * 1.02 else "?? "
+        print(f"{arch:24s} {cfg.family:8s} {e_awq:12.3e} {e_tq:14.3e} {mark}")
+
+
+if __name__ == "__main__":
+    main()

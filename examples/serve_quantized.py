@@ -1,0 +1,17 @@
+"""End-to-end serving driver (the paper's deployment scenario, Table 8):
+TesseraQ-quantize a model, pack it, and serve a batch of requests with
+prefill + step-wise decode over a shared KV cache.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main([
+        "--arch", "tinyllama-1.1b", "--reduced",
+        "--quant", "W4A16g32", "--method", "tesseraq", "--init", "awq",
+        "--requests", "8", "--prompt-len", "32", "--gen", "16",
+        "--par-iters", "3", "--par-steps", "15",
+    ]))

@@ -1,0 +1,7 @@
+from repro.core.qtensor import QTensor, pack, unpack, qmatmul, is_quantized
+from repro.core.tesseraq import TesseraQConfig
+from repro.core.pipeline import pack_model, quantize_model, quantized_memory_report
+
+__all__ = ["QTensor", "pack", "unpack", "qmatmul", "is_quantized",
+           "TesseraQConfig", "pack_model", "quantize_model",
+           "quantized_memory_report"]

@@ -1,0 +1,69 @@
+"""AWQ: activation-aware weight quantization (Lin et al., 2023), with the
+asymmetric-clipping variant (Gong et al., 2024) the paper initializes from.
+
+Per linear: grid-search (1) the equivalent-transformation exponent alpha for
+the per-input-channel scale  s_ch = mean|X|^alpha / norm , and (2) a clipping
+shrink factor on the group min/max — both against the layer reconstruction
+objective  || (X/s_ch) Q(W*s_ch) - X W ||_F^2  on a captured token subsample.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+
+ALPHA_GRID = (0.0, 0.15, 0.3, 0.45, 0.6, 0.75, 0.9)
+CLIP_GRID = (1.0, 0.95, 0.9, 0.85)
+
+
+def _act_scale(mean_abs: np.ndarray, alpha: float) -> np.ndarray:
+    s = np.power(np.maximum(mean_abs, 1e-5), alpha)
+    s = s / np.exp(np.mean(np.log(s)))          # geo-mean normalize
+    return np.clip(s, 1e-4, 1e4).astype(np.float32)
+
+
+def awq_leaf(w, stats, qcfg: QuantConfig):
+    """Returns (fake-quant effective weight, qmeta).  w: (..., in, out)."""
+    wf = np.asarray(w, np.float32)
+    X = stats.sample                                     # (n, in)
+    if X.shape[0] == 0 or X.shape[1] != wf.shape[-2]:
+        # no activations seen (shouldn't happen) -> fall back to RTN
+        from repro.core.rtn import rtn_leaf
+        return rtn_leaf(w, qcfg)
+    y_ref = X @ wf if wf.ndim == 2 else np.einsum("ni,eio->eno", X, wf)
+
+    best = (None, None, np.inf)
+    for alpha in ALPHA_GRID:
+        s_ch = _act_scale(stats.mean_abs, alpha)
+        wt = wf * s_ch[..., :, None]
+        for clip in CLIP_GRID:
+            fq = np.asarray(Q.fake_quantize(jnp.asarray(wt), qcfg,
+                                            gamma=clip, beta=clip))
+            w_eff = fq / s_ch[..., :, None]
+            y = X @ w_eff if wf.ndim == 2 else np.einsum("ni,eio->eno", X, w_eff)
+            err = float(np.mean((y - y_ref) ** 2))
+            if err < best[2]:
+                best = (alpha, clip, err)
+    alpha, clip, _ = best
+    s_ch = _act_scale(stats.mean_abs, alpha)
+    wt = jnp.asarray(wf * s_ch[..., :, None])
+    scale, zero = Q.compute_scale_zero(wt, qcfg, gamma=clip, beta=clip)
+    codes = Q.quantize_codes(wt, scale, zero, qcfg)
+    fq = Q.dequantize_codes(codes, scale, zero, qcfg) / s_ch[..., :, None]
+    meta = {"scale": scale, "zero": zero,
+            "act_scale": jnp.asarray(s_ch), "dst": None,
+            "alpha": alpha, "clip": clip, "codes": codes.astype(jnp.uint8)}
+    return fq.astype(w.dtype), meta
+
+
+def quantize_block_awq(bp, captures, qcfg: QuantConfig):
+    qmeta = {}
+    for p in quant_leaf_paths(bp):
+        w = get_path(bp, p)
+        fq, meta = awq_leaf(w, captures[p], qcfg)
+        bp = set_path(bp, p, fq)
+        qmeta[p] = meta
+    return bp, qmeta

@@ -1,0 +1,87 @@
+"""Eager-mode capture of per-linear input activations inside a block.
+
+AWQ/GPTQ need, for every linear W in a block, statistics of that linear's own
+input X (mean |X| per channel; a token subsample for the reconstruction
+objective; optionally X^T X for GPTQ's Hessian).  We obtain them by running
+the block *uncompiled* with ``layers.matmul`` / ``layers.expert_matmul``
+temporarily patched to record (weight-identity -> stats); weight identities
+are mapped back to param paths.
+
+MoE expert weights see their own capacity-gathered inputs (zero-padded slots
+dilute ``mean_abs`` by a uniform factor that cancels under AWQ's relative
+scale search — documented approximation).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.blocks import get_path, quant_leaf_paths
+from repro.models import layers as L
+
+MAX_ROWS = 1024          # token subsample kept per linear for objectives
+
+
+class LinearStats:
+    def __init__(self):
+        self.abs_sum = None
+        self.count = 0
+        self.rows = []
+        self.row_count = 0
+        self.hessian = None
+
+    def update(self, x: np.ndarray, want_hessian: bool):
+        x2d = x.reshape(-1, x.shape[-1]).astype(np.float32)
+        a = np.abs(x2d).sum(0)
+        self.abs_sum = a if self.abs_sum is None else self.abs_sum + a
+        self.count += x2d.shape[0]
+        if self.row_count < MAX_ROWS:
+            take = min(MAX_ROWS - self.row_count, x2d.shape[0])
+            idx = np.linspace(0, max(x2d.shape[0] - 1, 0), take).astype(int)
+            self.rows.append(x2d[idx])
+            self.row_count += take
+        if want_hessian:
+            h = x2d.T @ x2d
+            self.hessian = h if self.hessian is None else self.hessian + h
+
+    @property
+    def mean_abs(self) -> np.ndarray:
+        return self.abs_sum / max(self.count, 1)
+
+    @property
+    def sample(self) -> np.ndarray:
+        return np.concatenate(self.rows, 0) if self.rows else np.zeros((0, 1))
+
+
+def capture_block_inputs(apply: Callable, bp, xs, auxs=None, *,
+                         want_hessian: bool = False) -> Dict[tuple, LinearStats]:
+    """Run ``apply(bp, x, aux)`` eagerly over minibatches, recording inputs of
+    every quantizable linear.  xs/auxs: lists of minibatch arrays."""
+    paths = quant_leaf_paths(bp)
+    by_id = {id(get_path(bp, p)): p for p in paths}
+    stats = {p: LinearStats() for p in paths}
+
+    orig_mm, orig_emm = L.matmul, L.expert_matmul
+
+    def rec(w, x):
+        p = by_id.get(id(w))
+        if p is not None:
+            stats[p].update(np.asarray(x), want_hessian)
+
+    def patched_mm(x, w):
+        rec(w, x)
+        return orig_mm(x, w)
+
+    def patched_emm(a, w):
+        rec(w, a)
+        return orig_emm(a, w)
+
+    L.matmul, L.expert_matmul = patched_mm, patched_emm
+    try:
+        for i, x in enumerate(xs):
+            aux = auxs[i] if auxs is not None else None
+            apply(bp, x, aux)
+    finally:
+        L.matmul, L.expert_matmul = orig_mm, orig_emm
+    return stats

@@ -1,0 +1,109 @@
+"""GPTQ (Frantar et al., 2022): Hessian-guided column-wise quantization with
+error compensation.  The paper uses GPTQ both as a baseline (Tables 1/2/9)
+and, combined with QuaRot, as the W4A4/W3A3 competitor (Table 3).
+
+Implemented in numpy per linear (calibration is offline and per-block small).
+Weights are (in, out); GPTQ walks the *input* dim, compensating remaining
+rows — equivalent to the row formulation on W^T.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+
+PERCDAMP = 0.01
+BLOCK = 128
+
+
+def _gptq_matrix(W: np.ndarray, H: np.ndarray, qcfg: QuantConfig) -> np.ndarray:
+    """W: (in, out) fp32; H: (in, in).  Returns fake-quantized W_hat."""
+    n_in, n_out = W.shape
+    g = Q.resolve_group(n_in, qcfg.group_size)
+    W = W.copy()
+    H = H.copy()
+
+    dead = np.diag(H) == 0
+    H[dead, dead] = 1.0
+    W[dead, :] = 0.0
+    damp = PERCDAMP * np.mean(np.diag(H))
+    H[np.arange(n_in), np.arange(n_in)] += damp
+    # Hinv via Cholesky of inverse (upper)
+    Hinv = np.linalg.inv(H)
+    # enforce symmetry for stable cholesky
+    Hinv = (Hinv + Hinv.T) / 2
+    try:
+        Hc = np.linalg.cholesky(Hinv).T          # upper triangular
+    except np.linalg.LinAlgError:
+        Hinv += np.eye(n_in) * (1e-4 * np.mean(np.diag(Hinv)))
+        Hc = np.linalg.cholesky(Hinv).T
+
+    Whin = W.copy()
+    n_groups = n_in // g
+    scales = np.zeros((n_groups, n_out), np.float32)
+    zeros = np.zeros((n_groups, n_out), np.float32)
+    codes = np.zeros((n_in, n_out), np.uint8)
+    scale = zero = None
+    out = np.zeros_like(W)
+    for i1 in range(0, n_in, BLOCK):
+        i2 = min(i1 + BLOCK, n_in)
+        Wb = Whin[i1:i2].copy()
+        Qb = np.zeros_like(Wb)
+        Eb = np.zeros_like(Wb)
+        Hb = Hc[i1:i2, i1:i2]
+        for j in range(i2 - i1):
+            col = i1 + j
+            if col % g == 0:
+                # fresh scale/zero for this group from the *current* weights
+                seg = Whin[col:col + g]
+                s, z = Q.compute_scale_zero(jnp.asarray(seg), qcfg)
+                scale, zero = np.asarray(s)[0], np.asarray(z)[0]
+                scales[col // g], zeros[col // g] = scale, zero
+            w_row = Wb[j]
+            qv = np.clip(np.round(w_row / scale) + zero, 0, qcfg.qmax)
+            codes[col] = qv.astype(np.uint8)
+            dq = (qv - zero) * scale
+            Qb[j] = dq
+            err = (w_row - dq) / Hb[j, j]
+            Eb[j] = err
+            if j + 1 < i2 - i1:
+                Wb[j + 1:] -= np.outer(Hb[j, j + 1:], err)
+        out[i1:i2] = Qb
+        if i2 < n_in:
+            Whin[i2:] -= Hc[i1:i2, i2:].T @ Eb
+        Whin[i1:i2] = Wb
+    return out, scales, zeros, codes
+
+
+def gptq_leaf(w, stats, qcfg: QuantConfig):
+    wf = np.asarray(w, np.float32)
+    H = stats.hessian
+    if H is None:
+        X = stats.sample
+        H = X.T @ X if X.shape[0] else np.eye(wf.shape[-2], dtype=np.float32)
+    if wf.ndim == 3:
+        res = [_gptq_matrix(wf[e], H, qcfg) for e in range(wf.shape[0])]
+        fq = np.stack([r[0] for r in res])
+        scale = jnp.asarray(np.stack([r[1] for r in res]))
+        zero = jnp.asarray(np.stack([r[2] for r in res]))
+        codes = jnp.asarray(np.stack([r[3] for r in res]))
+    else:
+        fq, scale, zero, codes = _gptq_matrix(wf, H, qcfg)
+        scale, zero, codes = (jnp.asarray(scale), jnp.asarray(zero),
+                              jnp.asarray(codes))
+    meta = {"scale": scale, "zero": zero, "act_scale": None, "dst": None,
+            "codes": codes}
+    return jnp.asarray(fq, w.dtype), meta
+
+
+def quantize_block_gptq(bp, captures, qcfg: QuantConfig):
+    qmeta = {}
+    for p in quant_leaf_paths(bp):
+        w = get_path(bp, p)
+        fq, meta = gptq_leaf(w, captures[p], qcfg)
+        bp = set_path(bp, p, fq)
+        qmeta[p] = meta
+    return bp, qmeta

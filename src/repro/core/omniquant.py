@@ -1,0 +1,86 @@
+"""OmniQuant-style learnable weight clipping (LWC) with block reconstruction
+(Shao et al., 2023) — the paper's strongest baseline and its W2A16 initializer.
+
+Per group we learn gamma = sigmoid(g), beta = sigmoid(b) shrinking the
+max/min clipping range; rounding uses the straight-through estimator (the
+biased-gradient approach TesseraQ's PAR deliberately avoids — kept here
+faithfully as the baseline)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+from repro.optim.adam import AdamW
+
+
+def _ste_round(x):
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _lwc_weight(w, g, b, qcfg: QuantConfig):
+    gs = Q.resolve_group(w.shape[-2], qcfg.group_size)
+    wg = w.reshape(w.shape[:-2] + (w.shape[-2] // gs, gs, w.shape[-1]))
+    wmax = jnp.max(wg, axis=-2) * jax.nn.sigmoid(g)
+    wmin = jnp.min(wg, axis=-2) * jax.nn.sigmoid(b)
+    scale = jnp.maximum(wmax - wmin, 1e-8) / qcfg.qmax
+    zero = _ste_round(-wmin / scale)
+    q = jnp.clip(_ste_round(wg / scale[..., None, :]) + zero[..., None, :],
+                 0, qcfg.qmax)
+    wq = (q - zero[..., None, :]) * scale[..., None, :]
+    return wq.reshape(w.shape), scale, zero
+
+
+def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
+                      steps: int = 2000, lr: float = 1e-2, batch_size: int = 4,
+                      seed: int = 0, log: Optional[list] = None):
+    """LWC block reconstruction. Returns (bp_fq, qmeta)."""
+    paths = quant_leaf_paths(bp)
+    # init at sigmoid^-1(~1.0-) => gamma,beta start near 1 (4.0 -> 0.982)
+    tr = {p: {"g": jnp.full(_scale_shape(get_path(bp, p), qcfg), 4.0),
+              "b": jnp.full(_scale_shape(get_path(bp, p), qcfg), 4.0)}
+          for p in paths}
+    ws = {p: jnp.asarray(get_path(bp, p), jnp.float32) for p in paths}
+
+    def loss_fn(tr, xb, yb, auxb):
+        b2 = bp
+        for p in paths:
+            wq, _, _ = _lwc_weight(ws[p], tr[p]["g"], tr[p]["b"], qcfg)
+            b2 = set_path(b2, p, wq.astype(get_path(bp, p).dtype))
+        out = apply(b2, xb, auxb)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    opt = AdamW(lr=lr)
+    st = opt.init(tr)
+    rng = np.random.default_rng(seed)
+    N = X.shape[0]
+    bs = min(batch_size, N)
+    for t in range(steps):
+        idx = rng.choice(N, bs, replace=False)
+        auxb = jnp.asarray(aux[idx]) if aux is not None else None
+        lv, grads = grad_fn(tr, jnp.asarray(X[idx]),
+                            jnp.asarray(Y[idx], jnp.float32), auxb)
+        tr, st = opt.update(grads, st, tr)
+        if log is not None and t % 100 == 0:
+            log.append({"step": t, "loss": float(lv)})
+
+    qmeta = {}
+    for p in paths:
+        wq, scale, zero = _lwc_weight(ws[p], tr[p]["g"], tr[p]["b"], qcfg)
+        codes = Q.quantize_codes(wq, scale, zero, qcfg)
+        bp = set_path(bp, p, wq.astype(get_path(bp, p).dtype))
+        qmeta[p] = {"scale": scale, "zero": jnp.round(zero),
+                    "act_scale": None, "dst": None,
+                    "codes": codes.astype(jnp.uint8)}
+    return bp, qmeta
+
+
+def _scale_shape(w, qcfg: QuantConfig):
+    gs = Q.resolve_group(w.shape[-2], qcfg.group_size)
+    return w.shape[:-2] + (w.shape[-2] // gs, w.shape[-1])

@@ -1,0 +1,229 @@
+"""End-to-end PTQ pipeline (paper Algorithm 1 at model scope).
+
+``quantize_model`` walks the architecture's stages block by block:
+  1. collect the block's input stream X (from the progressively-quantized
+     model — errors compose, as in OmniQuant/BRECQ) and the FP target
+     block(theta_fp, X);
+  2. initialize scale/zero (+ AWQ transformation) per linear;
+  3. optimize rounding with TesseraQ (or LWC for the OmniQuant baseline);
+  4. write the fake-quantized block back and advance the stream.
+
+``pack_model`` then converts the calibrated model into the deployment form:
+stacked packed QTensors per linear, with DST folded into the scales.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core import awq as awq_mod
+from repro.core import gptq as gptq_mod
+from repro.core import omniquant as omni_mod
+from repro.core import rtn as rtn_mod
+from repro.core import signround as sr_mod
+from repro.core import tesseraq as tq_mod
+from repro.core.blocks import build_stages, get_path, quant_leaf_paths, set_path
+from repro.core.capture import capture_block_inputs
+from repro.core.quantizer import resolve_group
+from repro.core.qtensor import QTensor, pack
+from repro.models.common import Ctx, DEFAULT_CTX
+
+
+def _minibatches(batch_list):
+    return batch_list
+
+
+def _stream(fn, batches, out_list):
+    outs = [np.asarray(fn(b)) for b in batches]
+    return np.concatenate(outs, 0)
+
+
+def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
+                   qcfg: QuantConfig, *, method: str = "tesseraq",
+                   init: str = "awq",
+                   tcfg: Optional[tq_mod.TesseraQConfig] = None,
+                   omni_steps: int = 500,
+                   ctx: Ctx = DEFAULT_CTX,
+                   input_source: str = "fp",
+                   verbose: bool = False):
+    """Returns (params_fq, qmeta, report).
+
+    ``batches``: list of batch dicts (calibration set, pre-minibatched).
+    method: tesseraq | omniquant | signround | none (init only)
+    init:   awq | rtn | gptq   (scale/zero/transform initialization)
+    input_source: "fp" (paper Algorithm 1: block inputs collected from the
+        FP model) or "quant" (BRECQ/OmniQuant-style compounding: inputs from
+        the progressively-quantized stream, targets from the FP block)
+    """
+    tcfg = tcfg or tq_mod.TesseraQConfig()
+    stages = build_stages(cfg, ctx)
+    params_q = params
+    saved: Dict[str, np.ndarray] = {}
+    qmeta_all: Dict = {}
+    report = {"blocks": [], "method": method, "init": init, "qcfg": qcfg.tag()}
+
+    X = X_fp = None
+    for stage in stages:
+        # stage input stream (None => continue the running stream)
+        per_batch = []
+        for b in batches:
+            x0 = stage.init_x(params_q, b, saved)
+            per_batch.append(x0)
+        if per_batch[0] is not None:
+            X = np.concatenate([np.asarray(x) for x in per_batch], 0)
+            X_fp = X
+        aux = None
+        aux_parts = [stage.make_aux(params_q, b, saved) for b in batches]
+        if aux_parts[0] is not None:
+            aux = np.concatenate([np.asarray(a) for a in aux_parts], 0)
+
+        napply = jax.jit(stage.apply)
+
+        for i in range(stage.n_blocks):
+            t0 = time.time()
+            bp_fp = stage.get_block(params_q, i)
+            mb = 4
+            src = X_fp if input_source == "fp" else X
+            xs = [jnp.asarray(src[j:j + mb])
+                  for j in range(0, src.shape[0], mb)]
+            auxs = ([jnp.asarray(aux[j:j + mb])
+                     for j in range(0, aux.shape[0], mb)]
+                    if aux is not None else None)
+
+            if stage.calibrate:
+                # FP target block(theta, X) on the selected input stream
+                Y = np.concatenate(
+                    [np.asarray(napply(bp_fp, xs[j],
+                                       auxs[j] if auxs else None))
+                     for j in range(len(xs))], 0)
+
+                want_h = init == "gptq"
+                caps = (capture_block_inputs(stage.apply, bp_fp, xs, auxs,
+                                             want_hessian=want_h)
+                        if init in ("awq", "gptq") else None)
+                if init == "awq":
+                    bp_init, qmeta = awq_mod.quantize_block_awq(bp_fp, caps, qcfg)
+                elif init == "gptq":
+                    bp_init, qmeta = gptq_mod.quantize_block_gptq(bp_fp, caps, qcfg)
+                else:
+                    bp_init, qmeta = rtn_mod.quantize_block_rtn(bp_fp, qcfg)
+
+                log: list = []
+                if method == "tesseraq":
+                    bp_q, qmeta = tq_mod.reconstruct_block(
+                        stage.apply, bp_fp, src, Y, aux, qmeta, qcfg, tcfg,
+                        log=log)
+                elif method == "omniquant":
+                    bp_q, qmeta = omni_mod.reconstruct_block(
+                        stage.apply, bp_fp, src, Y, aux, qcfg,
+                        steps=omni_steps, log=log)
+                elif method == "signround":
+                    bp_q, qmeta = sr_mod.reconstruct_block(
+                        stage.apply, bp_fp, src, Y, aux, qmeta, qcfg,
+                        steps=max(tcfg.par_iterations
+                                  * tcfg.steps_per_iteration, 50),
+                        log=log)
+                else:
+                    bp_q = bp_init
+
+                params_q = stage.set_block(params_q, i, bp_q)
+                for p_, m_ in qmeta.items():
+                    qmeta_all[stage.pack_target(i) + tuple(p_)] = m_
+                # block-level report: recon error before/after
+                bq = stage.get_block(params_q, i)
+                err = float(np.mean([
+                    np.mean((np.asarray(napply(bq, xs[j],
+                                               auxs[j] if auxs else None),
+                                        np.float32)
+                             - np.asarray(Y[j * mb:(j + 1) * mb],
+                                          np.float32)) ** 2)
+                    for j in range(len(xs))]))
+                report["blocks"].append(
+                    {"stage": stage.name, "block": i, "recon_mse": err,
+                     "secs": time.time() - t0, "log": log})
+                if verbose:
+                    print(f"[{stage.name} {i}] mse={err:.3e} "
+                          f"({time.time()-t0:.1f}s)")
+            # advance both streams
+            bq = stage.get_block(params_q, i)
+            xq_in = [jnp.asarray(X[j:j + mb])
+                     for j in range(0, X.shape[0], mb)]
+            X = np.concatenate(
+                [np.asarray(napply(bq, xq_in[j], auxs[j] if auxs else None))
+                 for j in range(len(xq_in))], 0)
+            if input_source == "fp":
+                xf_in = [jnp.asarray(X_fp[j:j + mb])
+                         for j in range(0, X_fp.shape[0], mb)]
+                X_fp = np.concatenate(
+                    [np.asarray(napply(bp_fp, xf_in[j],
+                                       auxs[j] if auxs else None))
+                     for j in range(len(xf_in))], 0)
+            else:
+                X_fp = X
+
+        if stage.save_as:
+            saved[stage.save_as] = X
+    return params_q, qmeta_all, report
+
+
+def pack_model(cfg: ModelConfig, params_q: Dict, qmeta_all: Dict,
+               qcfg: QuantConfig) -> Dict:
+    """Convert calibrated fake-quant params into stacked packed QTensors."""
+    # group metas: (param_key, path) -> {layer_idx: meta}
+    grouped: Dict = {}
+    for key, meta in qmeta_all.items():
+        pkey, idx, path = key[0], key[1], key[2:]
+        grouped.setdefault((pkey, path), {})[idx] = meta
+
+    out = params_q
+    for (pkey, path), metas in grouped.items():
+        idxs = sorted(metas)
+        full_path = (pkey,) + path
+        leaf = get_path(out, full_path)                      # (L?, ..., in, out)
+        stacked_codes = np.stack(
+            [np.asarray(metas[i]["codes"], np.uint8) for i in idxs])
+        scale = np.stack([np.asarray(metas[i]["scale"], np.float32)
+                          for i in idxs])
+        zero = np.stack([np.asarray(metas[i]["zero"], np.float32)
+                         for i in idxs])
+        act = (np.stack([np.asarray(metas[i]["act_scale"], np.float32)
+                         for i in idxs])
+               if metas[idxs[0]].get("act_scale") is not None else None)
+        if leaf.ndim == stacked_codes.ndim - 1:               # single block slot
+            stacked_codes, scale, zero = (stacked_codes[0], scale[0], zero[0])
+            act = act[0] if act is not None else None
+        elif leaf.shape[0] != stacked_codes.shape[0]:
+            raise ValueError(f"layer count mismatch at {full_path}")
+        in_f = stacked_codes.shape[-2]
+        qt = QTensor(
+            packed=pack(jnp.asarray(stacked_codes), qcfg.bits, axis=-2),
+            scale=jnp.asarray(scale),
+            zero=jnp.asarray(zero),
+            bits=qcfg.bits,
+            group_size=resolve_group(in_f, qcfg.group_size),
+            shape=(in_f, stacked_codes.shape[-1]),
+            act_scale=jnp.asarray(act) if act is not None else None,
+        )
+        out = set_path(out, full_path, qt)
+    return out
+
+
+def quantized_memory_report(params) -> Dict:
+    """Paper Table 8 'WM': weight memory of the deployment artifact."""
+    total_q, total_fp = 0, 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total_q += leaf.memory_bytes()
+            total_fp += int(np.prod(leaf.packed.shape[:-2])) * \
+                leaf.in_features * leaf.out_features * 2
+        else:
+            total_q += leaf.size * 2
+            total_fp += leaf.size * 2
+    return {"quantized_bytes": total_q, "fp16_bytes": total_fp,
+            "compression": total_fp / max(total_q, 1)}

@@ -1,0 +1,144 @@
+"""QTensor: a packed, uniformly-quantized weight that drops into any matmul.
+
+This is the deployment artifact of the whole pipeline (paper Table 8): weights
+live in HBM as packed low-bit integers and are dequantized on the fly next to
+the matmul (Pallas kernel on TPU, XLA unpack on other backends).
+
+Registered as a pytree so QTensors flow through jit/pjit/shard_map/checkpoints
+exactly like plain arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# values packed per uint8 container byte
+PACK_FACTOR = {2: 4, 3: 2, 4: 2, 8: 1}
+# effective container bits per weight (3-bit uses 4-bit fields; documented)
+CONTAINER_BITS = {2: 2, 3: 4, 4: 4, 8: 8}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Packed weight of logical shape ``shape`` = (..., in_features, out_features).
+
+    ``packed``  uint8 (..., in_features // pack, out_features)
+    ``scale``   float (..., n_groups, out_features)   (dequantization scale,
+                 already includes TesseraQ's DST factor 2·sigmoid(v))
+    ``zero``    float (..., n_groups, out_features)   (zero point, stored float)
+    """
+    packed: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group_size: int              # group along in_features; == in_features for per-channel
+    shape: Tuple[int, ...]
+    # AWQ equivalent-transformation scale on the *input* channels; on real
+    # deployments it is folded into the producing op — here it is applied
+    # explicitly as x / act_scale so the math is exact in simulation.
+    act_scale: Optional[jax.Array] = None
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return ((self.packed, self.scale, self.zero, self.act_scale),
+                (self.bits, self.group_size, self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale, zero, act_scale = children
+        bits, group_size, shape = aux
+        return cls(packed, scale, zero, bits, group_size, shape, act_scale)
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def in_features(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def out_features(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def memory_bytes(self) -> int:
+        """Deployed weight-memory (container bytes + metadata)."""
+        n = int(np.prod(self.shape))
+        meta = self.scale.size * 2 + self.zero.size * 2     # bf16 scale/zero
+        return n * CONTAINER_BITS[self.bits] // 8 + meta
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        """Returns (*batch_dims, in_features, out_features).
+
+        ``shape`` is always the logical 2-D (in, out); leading array dims
+        (stacked layers, experts) ride along as batch dims so QTensors can be
+        sliced by lax.scan / vmap like any stacked weight.
+        """
+        w_int = unpack(self.packed, self.bits, self.in_features, axis=-2)
+        g = self.group_size
+        ng = self.in_features // g
+        bshape = self.packed.shape[:-2]
+        w_int = w_int.reshape(bshape + (ng, g, self.out_features))
+        # dequant arithmetic directly in the target dtype: at bf16 this
+        # halves the materialized intermediate traffic vs an f32 staging
+        # pass (§Perf iteration A2); scales/zeros round to bf16 exactly as
+        # they would on a real deployment.
+        scale = self.scale[..., :, None, :].astype(dtype)
+        zero = self.zero[..., :, None, :].astype(dtype)
+        w = (w_int.astype(dtype) - zero) * scale
+        return w.reshape(bshape + self.shape[-2:])
+
+
+def pack(w_int: jax.Array, bits: int, axis: int = -2) -> jax.Array:
+    """Pack integer codes (values in [0, 2^bits)) into uint8 along ``axis``."""
+    ppb = PACK_FACTOR[bits]
+    fbits = 8 // ppb                                  # field width in the byte
+    axis = axis % w_int.ndim
+    n = w_int.shape[axis]
+    assert n % ppb == 0, f"dim {n} not divisible by pack factor {ppb}"
+    w = jnp.moveaxis(w_int.astype(jnp.uint8), axis, -1)
+    w = w.reshape(w.shape[:-1] + (n // ppb, ppb))
+    shifts = (jnp.arange(ppb, dtype=jnp.uint8) * fbits)
+    packed = jnp.sum(w << shifts, axis=-1).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack(packed: jax.Array, bits: int, n: int, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack`; returns uint8 codes of size ``n`` along ``axis``.
+
+    The common (..., K/ppb, N) axis=-2 layout is handled without any
+    transpose so XLA fuses unpack+dequant into the consumer matmul's
+    prologue — a per-layer full-weight transpose showed up as the dominant
+    HBM term in the 405B decode roofline (§Perf iteration A2)."""
+    ppb = PACK_FACTOR[bits]
+    fbits = 8 // ppb
+    mask = (1 << fbits) - 1
+    axis = axis % packed.ndim
+    shifts = (jnp.arange(ppb, dtype=jnp.uint8) * fbits)
+    if axis == packed.ndim - 2:
+        p = packed[..., :, None, :]                   # (..., n/ppb, 1, N)
+        vals = (p >> shifts[:, None]) & mask          # (..., n/ppb, ppb, N)
+        return vals.reshape(packed.shape[:-2] + (n, packed.shape[-1]))
+    p = jnp.moveaxis(packed, axis, -1)
+    vals = (p[..., None] >> shifts) & mask            # (..., n/ppb, ppb)
+    vals = vals.reshape(p.shape[:-1] + (n,))
+    return jnp.moveaxis(vals, -1, axis)
+
+
+def qmatmul(x: jax.Array, w: "QTensor") -> jax.Array:
+    """x @ dequant(w). The XLA path; the Pallas kernel path lives in
+    repro.kernels.ops and is selected by the serving config."""
+    if w.act_scale is not None:
+        x = x / w.act_scale.astype(x.dtype)
+    return x @ w.dequantize(x.dtype)
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, QTensor)

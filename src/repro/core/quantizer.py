@@ -1,0 +1,107 @@
+"""Uniform affine quantization (paper Eq. 1) over per-group / per-channel
+weights, plus QTensor construction.
+
+Conventions: weights are (..., in_features, out_features); groups tile the
+*input* dimension (the reduction dim), matching AWQ/GPTQ/OmniQuant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core.qtensor import QTensor, pack
+
+
+def resolve_group(in_features: int, group_size: Optional[int]) -> int:
+    """Per-channel == one group spanning the whole input dim; fall back to it
+    when the requested group does not divide (small smoke models)."""
+    if group_size is None or in_features % group_size != 0:
+        return in_features
+    return group_size
+
+
+def _grouped(w: jax.Array, g: int) -> jax.Array:
+    """(..., in, out) -> (..., n_groups, g, out)."""
+    *b, n, o = w.shape
+    return w.reshape(*b, n // g, g, o)
+
+
+def compute_scale_zero(w: jax.Array, qcfg: QuantConfig,
+                       gamma: Optional[float] = None,
+                       beta: Optional[float] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Asymmetric scale/zero per group (Eq. 1).
+
+    Returns scale, zero of shape (..., n_groups, out).  ``gamma``/``beta``
+    shrink the max/min clipping range (AWQ-style clipping lives here).
+    """
+    g = resolve_group(w.shape[-2], qcfg.group_size)
+    wg = _grouped(w.astype(jnp.float32), g)
+    gamma = qcfg.gamma if gamma is None else gamma
+    beta = qcfg.beta if beta is None else beta
+    if qcfg.symmetric:
+        amax = jnp.max(jnp.abs(wg), axis=-2) * gamma
+        scale = jnp.maximum(amax, 1e-8) / (qcfg.qmax / 2)
+        zero = jnp.full_like(scale, (qcfg.qmax + 1) / 2)
+        return scale, zero
+    wmax = jnp.max(wg, axis=-2) * gamma
+    wmin = jnp.min(wg, axis=-2) * beta
+    scale = jnp.maximum(wmax - wmin, 1e-8) / qcfg.qmax
+    zero = jnp.round(-wmin / scale)
+    return scale, zero
+
+
+def quantize_codes(w: jax.Array, scale: jax.Array, zero: jax.Array,
+                   qcfg: QuantConfig) -> jax.Array:
+    """RTN integer codes in [0, qmax], shape of w."""
+    g = resolve_group(w.shape[-2], qcfg.group_size)
+    wg = _grouped(w.astype(jnp.float32), g)
+    q = jnp.clip(jnp.round(wg / scale[..., None, :]) + zero[..., None, :],
+                 0, qcfg.qmax)
+    return q.reshape(w.shape)
+
+
+def dequantize_codes(q: jax.Array, scale: jax.Array, zero: jax.Array,
+                     qcfg: QuantConfig, out_dtype=jnp.float32) -> jax.Array:
+    g = resolve_group(q.shape[-2], qcfg.group_size)
+    qg = _grouped(q.astype(jnp.float32), g)
+    w = (qg - zero[..., None, :]) * scale[..., None, :]
+    return w.reshape(q.shape).astype(out_dtype)
+
+
+def fake_quantize(w: jax.Array, qcfg: QuantConfig, gamma=None, beta=None
+                  ) -> jax.Array:
+    """RTN round-trip (the plain baseline and the inner op of search loops)."""
+    scale, zero = compute_scale_zero(w, qcfg, gamma, beta)
+    q = quantize_codes(w, scale, zero, qcfg)
+    return dequantize_codes(q, scale, zero, qcfg, w.dtype)
+
+
+def make_qtensor(w: jax.Array, qcfg: QuantConfig, *,
+                 scale: Optional[jax.Array] = None,
+                 zero: Optional[jax.Array] = None,
+                 codes: Optional[jax.Array] = None,
+                 dst_factor: Optional[jax.Array] = None,
+                 act_scale: Optional[jax.Array] = None) -> QTensor:
+    """Pack a weight into the deployment QTensor.
+
+    ``dst_factor`` is TesseraQ's dequantization-scale-tuning multiplier
+    2*sigmoid(v), folded into the stored scale (free at inference)."""
+    g = resolve_group(w.shape[-2], qcfg.group_size)
+    if scale is None:
+        scale, zero = compute_scale_zero(w, qcfg)
+    if codes is None:
+        codes = quantize_codes(w, scale, zero, qcfg)
+    eff_scale = scale * dst_factor if dst_factor is not None else scale
+    return QTensor(
+        packed=pack(codes.astype(jnp.uint8), qcfg.bits, axis=-2),
+        scale=eff_scale.astype(jnp.float32),
+        zero=zero.astype(jnp.float32),
+        bits=qcfg.bits,
+        group_size=g,
+        shape=w.shape[-2:],
+        act_scale=act_scale,
+    )

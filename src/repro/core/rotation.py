@@ -1,0 +1,74 @@
+"""QuaRot-style rotation (Ashkboos et al., 2024): multiply the residual
+stream by a random Hadamard-like orthogonal matrix to kill activation
+outliers before weight/activation quantization.  The paper composes
+TesseraQ with QuaRot for W4A4/W3A3 (Table 3).
+
+We implement exact residual-stream rotation for the *dense llama family*
+(the family the paper evaluates): RMSNorm scale vectors are first folded
+into the adjacent linears (RMSNorm without per-channel scale commutes with
+orthogonal Q), then every residual-writing weight is right-multiplied by Q
+and every residual-reading weight left-multiplied by Q^T.  The model output
+is bit-exact in infinite precision."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def hadamard(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Randomized orthogonal: Hadamard (power-of-2 n) with random signs,
+    otherwise a Haar-random orthogonal matrix."""
+    if n & (n - 1) == 0:
+        h = np.array([[1.0]])
+        while h.shape[0] < n:
+            h = np.block([[h, h], [h, -h]])
+        h = h / np.sqrt(n)
+        signs = rng.choice([-1.0, 1.0], size=n)
+        return (h * signs[None, :]).astype(np.float32)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    return q.astype(np.float32)
+
+
+def fold_rms_into_linears(params: dict, cfg: ModelConfig) -> dict:
+    """Fold ln1 into (wq,wk,wv), ln2 into (w_gate,w_up), ln_f into head;
+    norm scales become ones so RMSNorm commutes with rotation."""
+    b = dict(params["blocks"])
+    ln1 = b["ln1"].astype(jnp.float32)           # (L, d)
+    ln2 = b["ln2"].astype(jnp.float32)
+    for k in ("wq", "wk", "wv"):
+        b[k] = (b[k].astype(jnp.float32) * ln1[:, :, None]).astype(b[k].dtype)
+    for k in ("w_gate", "w_up"):
+        b[k] = (b[k].astype(jnp.float32) * ln2[:, :, None]).astype(b[k].dtype)
+    b["ln1"] = jnp.ones_like(b["ln1"])
+    b["ln2"] = jnp.ones_like(b["ln2"])
+    new = dict(params, blocks=b)
+    lnf = params["ln_f"].astype(jnp.float32)
+    if "head" in params:
+        new["head"] = (params["head"].astype(jnp.float32)
+                       * lnf[:, None]).astype(params["head"].dtype)
+        new["ln_f"] = jnp.ones_like(params["ln_f"])
+    return new
+
+
+def rotate_params(params: dict, cfg: ModelConfig, seed: int = 0) -> dict:
+    """Apply residual-stream rotation to a dense-family model."""
+    assert cfg.family == "dense", "rotation implemented for the dense family"
+    assert not cfg.tie_embeddings, "fold requires untied embeddings"
+    rng = np.random.default_rng(seed)
+    Qm = jnp.asarray(hadamard(cfg.d_model, rng))
+    p = fold_rms_into_linears(params, cfg)
+    b = dict(p["blocks"])
+    # residual readers: x @ W  ->  (x Q) @ (Q^T W)
+    for k in ("wq", "wk", "wv", "w_gate", "w_up"):
+        b[k] = jnp.einsum("de,lef->ldf", Qm.T, b[k].astype(jnp.float32)
+                          ).astype(b[k].dtype)
+    # residual writers: W -> W Q
+    for k in ("wo", "w_down"):
+        b[k] = jnp.einsum("lde,ef->ldf", b[k].astype(jnp.float32), Qm
+                          ).astype(b[k].dtype)
+    out = dict(p, blocks=b)
+    out["embed"] = (p["embed"].astype(jnp.float32) @ Qm).astype(p["embed"].dtype)
+    out["head"] = (Qm.T @ p["head"].astype(jnp.float32)).astype(p["head"].dtype)
+    return out

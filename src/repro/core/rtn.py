@@ -1,0 +1,28 @@
+"""Round-to-nearest baseline (paper Tables 1/9 "RTN")."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+
+
+def rtn_leaf(w, qcfg: QuantConfig):
+    """Returns (fake-quant weight, qmeta dict)."""
+    scale, zero = Q.compute_scale_zero(w, qcfg)
+    codes = Q.quantize_codes(w, scale, zero, qcfg)
+    fq = Q.dequantize_codes(codes, scale, zero, qcfg, w.dtype)
+    return fq, {"scale": scale, "zero": zero, "act_scale": None, "dst": None,
+                "codes": codes.astype(jnp.uint8)}
+
+
+def quantize_block_rtn(bp, qcfg: QuantConfig):
+    """Fake-quantize every linear in a block. Returns (bp_fq, {path: qmeta})."""
+    qmeta = {}
+    for p in quant_leaf_paths(bp):
+        w = get_path(bp, p)
+        fq, meta = rtn_leaf(w, qcfg)
+        bp = set_path(bp, p, fq.astype(w.dtype))
+        qmeta[p] = meta
+    return bp, qmeta

@@ -1,0 +1,100 @@
+"""SignRound (Cheng et al., 2023): weight-rounding optimization via *signed*
+gradient descent — the rounding-optimization baseline the paper compares
+against in Tables 2/11.
+
+A continuous perturbation V in [-0.5, 0.5] is added before rounding:
+    W_q = clamp(round_ste(W/s + V) + z, 0, 2^N - 1)
+and optimized with sign-SGD (update = -lr * sign(grad)) with linear lr decay
+against the block-reconstruction loss.  Unlike TesseraQ there is no
+progressive hardening and no dequant-scale tuning; unlike AdaRound there is
+no rectified-sigmoid regularizer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+
+
+def _ste_round(x):
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _sr_weight(w, v, scale, zero, qcfg: QuantConfig, act_scale=None):
+    g = Q.resolve_group(w.shape[-2], qcfg.group_size)
+    wf = w.astype(jnp.float32)
+    if act_scale is not None:
+        wf = wf * act_scale[..., :, None]
+    wg = wf.reshape(wf.shape[:-2] + (wf.shape[-2] // g, g, wf.shape[-1]))
+    vc = jnp.clip(v, -0.5, 0.5)
+    q = jnp.clip(_ste_round(wg / scale[..., None, :] + vc)
+                 + zero[..., None, :], 0, qcfg.qmax)
+    out = (q - zero[..., None, :]) * scale[..., None, :]
+    out = out.reshape(wf.shape)
+    if act_scale is not None:
+        out = out / act_scale[..., :, None]
+    return out, q
+
+
+def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
+                      qcfg: QuantConfig, *, steps: int = 200, lr: float = 5e-3,
+                      batch_size: int = 4, seed: int = 0,
+                      log: Optional[list] = None):
+    """Sign-SGD rounding optimization on one block.  qmeta supplies the
+    (AWQ/RTN) scale/zero/act_scale init, exactly as for TesseraQ."""
+    paths = quant_leaf_paths(bp)
+    fixed = {p: {"scale": qmeta[p]["scale"], "zero": qmeta[p]["zero"],
+                 "act_scale": qmeta[p].get("act_scale")} for p in paths}
+    vs = {}
+    for p in paths:
+        w = get_path(bp, p)
+        g = Q.resolve_group(w.shape[-2], qcfg.group_size)
+        vs[p] = jnp.zeros(w.shape[:-2] + (w.shape[-2] // g, g, w.shape[-1]),
+                          jnp.float32)
+
+    def substitute(vs):
+        b2 = bp
+        for p in paths:
+            w = get_path(bp, p)
+            wq, _ = _sr_weight(w, vs[p], fixed[p]["scale"], fixed[p]["zero"],
+                               qcfg, fixed[p]["act_scale"])
+            b2 = set_path(b2, p, wq.astype(w.dtype))
+        return b2
+
+    def loss_fn(vs, xb, yb, auxb):
+        out = apply(substitute(vs), xb, auxb)
+        return jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(seed)
+    N = X.shape[0]
+    bs = min(batch_size, N)
+    for t in range(steps):
+        idx = rng.choice(N, bs, replace=False)
+        auxb = jnp.asarray(aux[idx]) if aux is not None else None
+        lv, grads = grad_fn(vs, jnp.asarray(X[idx]),
+                            jnp.asarray(Y[idx], jnp.float32), auxb)
+        cur_lr = lr * (1.0 - t / steps)               # linear decay
+        vs = {p: jnp.clip(vs[p] - cur_lr * jnp.sign(grads[p]), -0.5, 0.5)
+              for p in paths}
+        if log is not None and t % 50 == 0:
+            log.append({"step": t, "loss": float(lv)})
+
+    new_meta = {}
+    for p in paths:
+        w = get_path(bp, p)
+        wq, q = _sr_weight(w, vs[p], fixed[p]["scale"], fixed[p]["zero"],
+                           qcfg, fixed[p]["act_scale"])
+        bp = set_path(bp, p, wq.astype(w.dtype))
+        new_meta[p] = {
+            "scale": fixed[p]["scale"], "zero": fixed[p]["zero"],
+            "act_scale": fixed[p]["act_scale"], "dst": None,
+            "codes": jnp.asarray(q, jnp.uint8).reshape(w.shape),
+        }
+    return bp, new_meta

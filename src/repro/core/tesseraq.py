@@ -1,0 +1,265 @@
+"""TesseraQ: Progressive Adaptive Rounding + Dequantization Scale Tuning
+(the paper's contribution, Sec. 3.2/3.3, Algorithm 1).
+
+Per block:
+  * rounding variables  nu  (one per weight element), sigmoid-reparameterized,
+    initialized to reproduce the FP weight exactly:
+        nu0 = logit(theta/s - floor(theta/s))
+  * DST variables  v  (one per quant group), dequant factor 2*sigmoid(v),
+    initialized to 1 (v = 0)
+  * K PAR iterations; iteration k HARDENS the P_k% of still-soft variables
+    with the lowest hardness score  HS(nu) = |sigmoid(nu) - 0.5|  (they are
+    frozen to their binary value), then SOFTENS: T Adam steps on the
+    surviving nu and all v against  || block(theta_hat, X) - block(theta, X) ||_F^2.
+
+Hardening is tracked with an explicit sign tensor (exactly-zero gradients for
+frozen variables); the paper's memory-light alternative (set nu to +-inf) is
+available via ``use_inf_freeze``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.blocks import get_path, quant_leaf_paths, set_path
+from repro.optim.adam import AdamW
+
+# handcrafted soft-rate schedule from the paper's Fig. 3 (fractions of
+# variables still soft after iteration k); len == K
+HANDCRAFTED_SOFT_RATE = (
+    0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.22, 0.16, 0.12,
+    0.09, 0.06, 0.04, 0.025, 0.015, 0.009, 0.005, 0.002, 0.001, 0.0,
+)
+
+
+def exp_soft_rate(k: int, K: int, t: float) -> float:
+    """Rule-based schedule 1/exp(t*x) (paper Sec. 4.3), x in (0, 1]."""
+    x = (k + 1) / K
+    return float(np.exp(-t * x)) if k + 1 < K else 0.0
+
+
+@dataclasses.dataclass
+class TesseraQConfig:
+    par_iterations: int = 20              # K
+    steps_per_iteration: int = 250        # T
+    lr: float = 1e-3
+    v_weight_decay: float = 1e-4          # on DST variables (paper Sec. 4)
+    batch_size: int = 4
+    soft_rate: Sequence[float] = HANDCRAFTED_SOFT_RATE
+    dst: bool = True                      # dequantization scale tuning
+    par: bool = True                      # progressive adaptive rounding
+    use_inf_freeze: bool = False          # paper's memory-light hardening
+    seed: int = 0
+
+
+def _leaf_state(w, meta, qcfg: QuantConfig):
+    """Per-linear PAR/DST state. Weights already in the transformed domain if
+    AWQ act_scale is present (we optimize rounding of W*act_scale)."""
+    wf = jnp.asarray(w, jnp.float32)
+    if meta.get("act_scale") is not None:
+        wf = wf * meta["act_scale"][..., :, None]
+    scale, zero = meta["scale"], meta["zero"]
+    g = Q.resolve_group(wf.shape[-2], qcfg.group_size)
+    wg = wf.reshape(wf.shape[:-2] + (wf.shape[-2] // g, g, wf.shape[-1]))
+    ratio = wg / scale[..., None, :]
+    base = jnp.floor(ratio)
+    frac = jnp.clip(ratio - base, 1e-4, 1 - 1e-4)
+    nu = jnp.log(frac) - jnp.log1p(-frac)            # logit
+    return {
+        "nu": nu.astype(jnp.float32),                 # grouped layout
+        "v": jnp.zeros_like(scale),
+        "hard": jnp.zeros(nu.shape, jnp.int8),        # 0 soft, +-1 frozen
+        "base": base,
+        "scale": scale,
+        "zero": zero,
+        "act_scale": meta.get("act_scale"),
+    }
+
+
+def soft_weight(st, qcfg: QuantConfig, dst: bool) -> jax.Array:
+    """Differentiable effective weight theta_hat (Eq. 4 + Eq. 9)."""
+    hard = st["hard"]
+    alpha = jnp.where(hard == 0, jax.nn.sigmoid(st["nu"]),
+                      (hard > 0).astype(jnp.float32))
+    q = jnp.clip(st["base"] + st["zero"][..., None, :] + alpha, 0, qcfg.qmax)
+    dq_scale = st["scale"][..., None, :]
+    if dst:
+        dq_scale = dq_scale * (2.0 * jax.nn.sigmoid(st["v"]))[..., None, :]
+    w = (q - st["zero"][..., None, :]) * dq_scale
+    w = w.reshape(_wshape(st["nu"]))
+    if st["act_scale"] is not None:
+        w = w / st["act_scale"][..., :, None]
+    return w
+
+
+def _wshape(nu):
+    """Grouped (..., ng, g, out) -> flat (..., ng*g, out) weight shape."""
+    return nu.shape[:-3] + (nu.shape[-3] * nu.shape[-2], nu.shape[-1])
+
+
+def hardness_score(nu: jax.Array) -> jax.Array:
+    return jnp.abs(jax.nn.sigmoid(nu) - 0.5)          # HS (Eq. 6)
+
+
+def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
+    """Freeze the lowest-HS soft variables so that only ``target_soft_rate``
+    of ALL rounding variables in the block remain soft.  The threshold is
+    global across the block's leaves (joint sort, as in Algorithm 1)."""
+    scores, softs = [], []
+    for st in states.values():
+        s = np.asarray(hardness_score(st["nu"])).ravel()
+        m = np.asarray(st["hard"]).ravel() == 0
+        scores.append(s[m])
+        softs.append(m)
+    all_scores = np.concatenate(scores) if scores else np.zeros(0)
+    total = sum(int(np.asarray(st["hard"]).size) for st in states.values())
+    want_soft = int(total * target_soft_rate)
+    n_soft_now = all_scores.size
+    n_to_freeze = max(0, n_soft_now - want_soft)
+    if n_to_freeze == 0:
+        return states
+    thresh = np.partition(all_scores, n_to_freeze - 1)[n_to_freeze - 1] \
+        if n_to_freeze < n_soft_now else np.inf
+
+    new = {}
+    for p, st in states.items():
+        nu = np.asarray(st["nu"])
+        hard = np.asarray(st["hard"]).copy()
+        hs = np.asarray(hardness_score(st["nu"]))
+        freeze = (hard == 0) & (hs <= thresh)
+        sign = np.where(nu > 0, 1, -1).astype(np.int8)
+        hard = np.where(freeze, sign, hard)
+        st = dict(st)
+        st["hard"] = jnp.asarray(hard)
+        if use_inf:
+            st["nu"] = jnp.asarray(np.where(hard != 0, hard * 40.0, nu),
+                                   jnp.float32)
+        new[p] = st
+    return new
+
+
+def substitute(bp, states, qcfg: QuantConfig, dst: bool):
+    for p, st in states.items():
+        bp = set_path(bp, p, soft_weight(st, qcfg, dst).astype(
+            get_path(bp, p).dtype))
+    return bp
+
+
+def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
+                      aux, qmeta: Dict, qcfg: QuantConfig,
+                      tcfg: TesseraQConfig, log: Optional[list] = None):
+    """Run TesseraQ on one block.
+
+    X: (N, S, d) inputs; Y: (N, S, d) FP outputs; aux: per-sample extra
+    stream or None.  Returns (bp_fq, qmeta') with DST folded into qmeta.
+    """
+    paths = quant_leaf_paths(bp)
+    states = {p: _leaf_state(get_path(bp, p), qmeta[p], qcfg) for p in paths}
+
+    opt = AdamW(lr=tcfg.lr)
+
+    def trainables(states):
+        t = {p: {"nu": st["nu"]} for p, st in states.items()}
+        if tcfg.dst:
+            for p in paths:
+                t[p]["v"] = states[p]["v"]
+        return t
+
+    def merge(states, tr):
+        out = {}
+        for p, st in states.items():
+            st = dict(st)
+            st["nu"] = tr[p]["nu"]
+            if tcfg.dst:
+                st["v"] = tr[p]["v"]
+            out[p] = st
+        return out
+
+    def loss_fn(tr, frozen, xb, yb, auxb):
+        sts = merge(frozen, tr)
+        bq = substitute(bp, sts, qcfg, tcfg.dst)
+        out = apply(bq, xb, auxb)
+        loss = jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
+        if tcfg.dst and tcfg.v_weight_decay:
+            loss = loss + tcfg.v_weight_decay * sum(
+                jnp.sum(jnp.square(t["v"])) for t in tr.values())
+        return loss
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    N = X.shape[0]
+    bs = min(tcfg.batch_size, N)
+    rng = np.random.default_rng(tcfg.seed)
+
+    K = tcfg.par_iterations if tcfg.par else 1
+    sr = list(tcfg.soft_rate)
+    opt_state = None
+    for k in range(K):
+        if tcfg.par:
+            # stretch the schedule over K iterations anchored at BOTH ends:
+            # the first harden freezes only 1-sr[0] (~10%, paper's gentle
+            # start) and the last always reaches 0.0 soft
+            idx = (int(round(k * (len(sr) - 1) / max(K - 1, 1)))
+                   if K > 1 else len(sr) - 1)
+            states = harden(states, sr[idx], tcfg.use_inf_freeze)
+        tr = trainables(states)
+        opt_state = opt.init(tr)
+        for t in range(tcfg.steps_per_iteration):
+            idx = rng.choice(N, bs, replace=False)
+            xb = jnp.asarray(X[idx])
+            yb = jnp.asarray(Y[idx], jnp.float32)
+            auxb = jnp.asarray(aux[idx]) if aux is not None else None
+            lv, grads = grad_fn(tr, states, xb, yb, auxb)
+            tr, opt_state = opt.update(grads, opt_state, tr)
+        states = merge(states, tr)
+        if log is not None:
+            log.append({"iter": k, "loss": float(lv),
+                        "soft_rate": float(np.mean([
+                            (np.asarray(st["hard"]) == 0).mean()
+                            for st in states.values()]))})
+
+    # ---- post-processing: hard-round everything, fold DST into the scale ---
+    new_meta = {}
+    for p in paths:
+        st = states[p]
+        alpha = np.where(np.asarray(st["hard"]) != 0,
+                         (np.asarray(st["hard"]) > 0),
+                         np.asarray(st["nu"]) > 0).astype(np.float32)
+        q = np.clip(np.asarray(st["base"]) + np.asarray(st["zero"])[..., None, :]
+                    + alpha, 0, qcfg.qmax)
+        dst_factor = (2.0 * jax.nn.sigmoid(st["v"])) if tcfg.dst else None
+        scale_eff = np.asarray(st["scale"]) * (np.asarray(dst_factor)
+                                               if dst_factor is not None else 1.0)
+        w = (q - np.asarray(st["zero"])[..., None, :]) * scale_eff[..., None, :]
+        w = w.reshape(_wshape(st["nu"]))
+        if st["act_scale"] is not None:
+            w = w / np.asarray(st["act_scale"])[..., :, None]
+        orig = get_path(bp, p)
+        bp = set_path(bp, p, jnp.asarray(w, orig.dtype))
+        new_meta[p] = {
+            "scale": jnp.asarray(scale_eff),          # DST folded in
+            "zero": st["zero"],
+            "act_scale": st["act_scale"],
+            "dst": jnp.asarray(dst_factor) if dst_factor is not None else None,
+            "codes": jnp.asarray(q, jnp.uint8).reshape(_wshape(st["nu"])),
+        }
+    return bp, new_meta
+
+
+def flip_stats(qmeta_before: Dict, qmeta_after: Dict) -> Dict:
+    """Paper Table 7: fraction of rounding decisions that flipped vs RTN."""
+    out = {}
+    for p in qmeta_after:
+        if "codes" not in qmeta_after[p] or "codes" not in qmeta_before[p]:
+            continue
+        a = np.asarray(qmeta_before[p]["codes"], np.int32)
+        b = np.asarray(qmeta_after[p]["codes"], np.int32)
+        out[p] = {"flipped": int((a != b).sum()), "total": int(a.size),
+                  "pct": float((a != b).mean() * 100)}
+    return out

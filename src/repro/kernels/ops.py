@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels, with padding/shape glue
+and a backend switch (``interpret=True`` on CPU, compiled on TPU).
+
+``qtensor_matmul`` is the drop-in QTensor consumer used by the serving path
+when ``REPRO_KERNEL_BACKEND=pallas`` (the XLA unpack path in
+core/qtensor.qmatmul is the default on CPU)."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import PACK_FACTOR, QTensor
+from repro.kernels import ref
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.soft_round import soft_round
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size",
+                                             "block_m", "block_n", "block_k"))
+def quant_matmul_op(x, packed, scale, zero, *, bits: int, group_size: int,
+                    block_m=256, block_n=256, block_k=512):
+    """Shape-gluing wrapper: pads M/N to tile multiples, trims after."""
+    M, K = x.shape
+    N = packed.shape[1]
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    bk = max(group_size, (bk // group_size) * group_size)
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    out = quant_matmul(xp, _pad_to(packed, bn, 1),
+                       _pad_to(scale, bn, 1), _pad_to(zero, bn, 1),
+                       bits=bits, group_size=group_size,
+                       block_m=bm, block_n=bn, block_k=bk,
+                       interpret=_interpret())
+    return out[:M, :N]
+
+
+def qtensor_matmul(x: jax.Array, w: QTensor) -> jax.Array:
+    """x: (..., K) bf16 x QTensor -> (..., N) via the Pallas kernel."""
+    if w.act_scale is not None:
+        x = x / w.act_scale.astype(x.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = quant_matmul_op(x2, w.packed, w.scale.astype(jnp.float32),
+                          w.zero.astype(jnp.float32),
+                          bits=w.bits, group_size=w.group_size)
+    return out.reshape(*lead, w.out_features)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def int8_matmul_op(x_q, w_q, x_scale, w_scale, out_dtype=jnp.bfloat16):
+    return int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=out_dtype,
+                       interpret=_interpret())
+
+
+def w4a8_matmul(x: jax.Array, w: QTensor, act_bits: int = 8) -> jax.Array:
+    """Dynamic per-token activation quant + integer matmul against a
+    per-channel (group_size == K) QTensor.
+
+    Asymmetric weights are recentered by 128 (exact in int8); the zero-point
+    contribution is restored with the standard rank-1 correction
+    ``rowsum(x_q) x (128 - zero)`` in the fp32 epilogue."""
+    x_q, x_scale = ref.quantize_per_token_ref(x.reshape(-1, x.shape[-1]),
+                                              act_bits)
+    from repro.core.qtensor import unpack
+    K = w.in_features
+    codes = unpack(w.packed, w.bits, K, axis=-2).astype(jnp.int32)
+    w_centered = (codes - 128).astype(jnp.int8)
+    w_scale = w.scale.astype(jnp.float32)[0:1, :]
+    out = int8_matmul_op(x_q, w_centered, x_scale, w_scale)
+    zero = w.zero.astype(jnp.float32)[0:1, :]
+    rowsum = jnp.sum(x_q.astype(jnp.float32), axis=-1, keepdims=True)
+    corr = (rowsum * x_scale) * ((128.0 - zero) * w_scale)
+    out = out.astype(jnp.float32) + corr
+    return out.astype(x.dtype).reshape(*x.shape[:-1], w.out_features)
+
+
+def soft_round_op(base, nu, hard, v, scale, zero, *, qmax: int,
+                  dst: bool = True):
+    return soft_round(base, nu, hard.astype(jnp.int32), v, scale, zero,
+                      qmax=qmax, dst=dst, interpret=_interpret())

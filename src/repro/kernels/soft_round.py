@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: TesseraQ soft-weight materialization (calibration-time
+hot loop).
+
+Every Soften-phase step re-materializes theta_hat from (base, nu, v, scale,
+zero) for every linear in the block (Eq. 4 + Eq. 9).  At 70B-class blocks
+that is ~200M elements per step; fusing sigmoid+clip+affine in one VMEM pass
+keeps it VPU-bound instead of HBM-bound.  Elementwise over the grouped
+layout (ng, g, out) tiled on (groups x out)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _soft_round_kernel(base_ref, nu_ref, hard_ref, v_ref, s_ref, z_ref,
+                       o_ref, *, qmax: int, dst: bool):
+    nu = nu_ref[...]
+    hard = hard_ref[...]
+    alpha = jnp.where(hard == 0, jax.nn.sigmoid(nu),
+                      (hard > 0).astype(jnp.float32))
+    z = z_ref[...][:, None, :]
+    q = jnp.clip(base_ref[...] + z + alpha, 0.0, float(qmax))
+    s = s_ref[...][:, None, :]
+    if dst:
+        s = s * (2.0 * jax.nn.sigmoid(v_ref[...]))[:, None, :]
+    o_ref[...] = (q - z) * s
+
+
+def soft_round(base, nu, hard, v, scale, zero, *, qmax: int, dst: bool = True,
+               block_g: int = 8, block_n: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """All grouped (ng, g, out); scale/zero/v: (ng, out). Returns theta_hat."""
+    ng, g, n = base.shape
+    bg, bn = min(block_g, ng), min(block_n, n)
+    assert ng % bg == 0 and n % bn == 0
+    grid = (ng // bg, n // bn)
+    full = pl.BlockSpec((bg, g, bn), lambda i, j: (i, 0, j))
+    grp = pl.BlockSpec((bg, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_soft_round_kernel, qmax=qmax, dst=dst),
+        grid=grid,
+        in_specs=[full, full, full, grp, grp, grp],
+        out_specs=full,
+        out_shape=jax.ShapeDtypeStruct((ng, g, n), jnp.float32),
+        interpret=interpret,
+    )(base, nu, hard, v, scale, zero)

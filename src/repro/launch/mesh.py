@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run forces a
+512-device host platform while tests/benches run on the single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single v5e pod (256 chips) or 2x16x16 (2 pods, 512 chips).
+
+    The ``pod`` axis is pure data parallelism: only gradient all-reduce
+    crosses the DCN between pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes=None):
+    """Arbitrary mesh for tests / elastic restarts (e.g. (2, 4))."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):] if len(shape) == 3 \
+            else ("data", "model")[:len(shape)]
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None

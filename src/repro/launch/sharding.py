@@ -1,0 +1,211 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Parameters and activations are annotated with *logical* dim names; a single
+table maps logical names to mesh axes.  Any dim that does not divide by its
+mesh-axis extent silently falls back to replication — so the same model code
+runs on 8-chip test meshes and 512-chip production meshes unmodified
+(elastic scaling = restore under a different mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.qtensor import QTensor
+from repro.launch.mesh import dp_axes
+
+# logical name -> tuple of mesh axes (joined when multiple)
+def logical_table(mesh, overrides=None):
+    dp = dp_axes(mesh)
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    table = {
+        "batch": dp,
+        "fsdp": ("data",) if "data" in mesh.axis_names else (),
+        "tensor": tp,
+        "expert": tp,
+        "vocab": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        None: (),
+        "seq": (),
+        "res_seq": (),      # residual-stream sequence dim; -> ("model",)
+                            # enables sequence parallelism (perf knob)
+        "embed": (),
+    }
+    if overrides:
+        table.update(overrides)
+    return table
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(mesh, logical: tuple, shape, overrides=None) -> P:
+    """Logical dim names -> PartitionSpec with divisibility fallback and
+    axis-reuse guard (first dim wins)."""
+    table = logical_table(mesh, overrides)
+    out = []
+    used = set()
+    for name, dim in zip(logical, shape):
+        axes = table.get(name, ())
+        if axes and dim % _axis_size(mesh, axes) == 0 \
+                and not (set(axes) & used):
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules: leaf name -> logical dims of the *trailing* (in, out) dims
+# (leading stacked layer/expert dims handled structurally)
+# --------------------------------------------------------------------------
+
+PARAM_RULES = {
+    # dense attention / mlp: 2D-shard (fsdp x tensor)
+    "wq": ("fsdp", "tensor"), "wk": ("fsdp", "tensor"), "wv": ("fsdp", "tensor"),
+    "wo": ("tensor", "fsdp"),
+    "w_gate": ("fsdp", "tensor"), "w_up": ("fsdp", "tensor"),
+    "w_down": ("tensor", "fsdp"),
+    # rwkv
+    "wr": ("fsdp", "tensor"), "wg": ("fsdp", "tensor"),
+    "ck": ("fsdp", "tensor"), "cv": ("tensor", "fsdp"), "cr": ("fsdp", "tensor"),
+    # mamba2
+    "in_proj": ("fsdp", None), "out_proj": ("tensor", "fsdp"),
+    # embeddings / head
+    "embed": ("vocab", "fsdp"), "head": ("fsdp", "vocab"),
+    "router": (None, None),
+}
+
+MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_logical(path, leaf, cfg: ModelConfig):
+    name = path[-1]
+    ndim = leaf.ndim if not isinstance(leaf, QTensor) else len(leaf.shape) + \
+        (leaf.packed.ndim - 2)
+    if name not in PARAM_RULES:
+        return (None,) * _leaf_ndim(leaf)
+    rule = PARAM_RULES[name]
+    n = _leaf_ndim(leaf)
+    lead = n - 2
+    lead_names: list = [None] * lead
+    # stacked MoE experts: (L, E, in, out) or (E, in, out) -> expert dim
+    if cfg.family == "moe" and name in MOE_EXPERT_LEAVES and lead >= 1:
+        lead_names[-1] = "expert"
+        # EP over the tensor axis + FSDP over data on the reduction dim;
+        # shard_map all-gathers the fsdp dim at entry (ZeRO-3 semantics)
+        rule = ("fsdp", None)
+    return tuple(lead_names) + rule
+
+
+def _leaf_ndim(leaf):
+    if isinstance(leaf, QTensor):
+        return leaf.packed.ndim
+    return leaf.ndim
+
+
+def _qtensor_spec(mesh, qt: QTensor, logical, overrides=None) -> QTensor:
+    """Spec pytree for a QTensor: packed/scale/zero (+act_scale) children."""
+    lead = logical[:-2]
+    in_l, out_l = logical[-2], logical[-1]
+    packed_spec = resolve_spec(mesh, lead + (in_l, out_l), qt.packed.shape,
+                               overrides)
+    scale_spec = resolve_spec(mesh, lead + (None, out_l), qt.scale.shape,
+                              overrides)
+    zero_spec = resolve_spec(mesh, lead + (None, out_l), qt.zero.shape,
+                             overrides)
+    act_spec = (resolve_spec(mesh, lead + (None,), qt.act_scale.shape,
+                             overrides)
+                if qt.act_scale is not None else None)
+    return QTensor(packed=NamedSharding(mesh, packed_spec),
+                   scale=NamedSharding(mesh, scale_spec),
+                   zero=NamedSharding(mesh, zero_spec),
+                   bits=qt.bits, group_size=qt.group_size, shape=qt.shape,
+                   act_scale=(NamedSharding(mesh, act_spec)
+                              if act_spec is not None else None))
+
+
+def param_shardings(mesh, params, cfg: ModelConfig, overrides=None):
+    """NamedSharding pytree matching ``params`` (dict tree, QTensor-aware).
+
+    ``overrides`` remaps logical axes — e.g. {"fsdp": ()} for serving, where
+    weights must be TP-resident (an FSDP all-gather per decode step would
+    dominate the collective roofline; see EXPERIMENTS.md §Perf)."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, QTensor):
+            return _qtensor_spec(mesh, node, _leaf_logical(path, node, cfg),
+                                 overrides)
+        logical = _leaf_logical(path, node, cfg)
+        return NamedSharding(mesh, resolve_spec(mesh, logical, node.shape,
+                                                overrides))
+    return walk(params, ())
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+def make_sharder(mesh, overrides=None):
+    def shard(x, names):
+        if x.ndim != len(names):
+            return x
+        spec = resolve_spec(mesh, tuple(names), x.shape, overrides)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return shard
+
+
+def batch_shardings(mesh, batch_struct):
+    """Batch dicts: shard dim 0 over the DP axes."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if leaf.shape[0] % _axis_size(mesh, dp) == 0 and dp:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, batch_struct)
+
+
+def cache_shardings(mesh, cache_struct, cfg: ModelConfig):
+    """KV / state caches: (L, B, ...) -> batch over DP; heads over TP when
+    divisible (GQA with few KV heads falls back to replication)."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            bdim = 1  # leading dim is stacked layers/sites
+            if leaf.shape[bdim] % _axis_size(mesh, dp) == 0 and dp:
+                spec[bdim] = dp_spec
+        if leaf.ndim >= 4 and tp:
+            # KV caches: (L,B,S,H,D) -> heads at -2; states: (L,B,H,K,V) -> 2
+            hdim = leaf.ndim - 2
+            if leaf.shape[hdim] % mesh.shape[tp] == 0:
+                spec[hdim] = tp
+            elif leaf.ndim == 5 and leaf.shape[2] % mesh.shape[tp] == 0:
+                # GQA with kv_heads < TP degree: shard the *sequence* dim —
+                # decode uses a masked (non-scatter) cache write and a
+                # single-row softmax, both of which partition over seq with
+                # only two small psums (§Perf iteration A1/A3)
+                spec[2] = tp
+            elif leaf.ndim == 5 and leaf.shape[-1] % mesh.shape[tp] == 0:
+                spec[-1] = tp
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, cache_struct)

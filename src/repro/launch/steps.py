@@ -1,0 +1,258 @@
+"""Jit-ready train/prefill/decode step builders over the production mesh,
+plus ShapeDtypeStruct input specs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, QuantConfig, ShapeConfig
+from repro.core.blocks import QUANT_LEAF_NAMES
+from repro.core.qtensor import PACK_FACTOR, QTensor
+from repro.core.quantizer import resolve_group
+from repro.launch.mesh import dp_axes, tp_axis
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   make_sharder, param_shardings)
+from repro.models import get_model
+from repro.models.common import Ctx
+from repro.optim.adam import AdamW, clip_by_global_norm
+from repro.optim.compression import compress_decompress, init_error
+
+
+def make_ctx(cfg: ModelConfig, mesh=None, *, act_bits=None, decode=False,
+             attn_chunk=512, remat=None, shard_overrides=None) -> Ctx:
+    # (shard_overrides: logical-axis remaps, e.g. {"seq": ("model",)} for
+    # attention sequence parallelism — the worst-fraction hillclimb knob)
+    if mesh is None:
+        return Ctx(act_bits=act_bits, attn_chunk=attn_chunk,
+                   remat=cfg.remat if remat is None else remat, decode=decode)
+    ep = tp_axis(mesh) if cfg.family == "moe" else None
+    return Ctx(shard=make_sharder(mesh, shard_overrides), mesh=mesh, ep_axis=ep,
+               dp_axes=dp_axes(mesh), act_bits=act_bits,
+               attn_chunk=attn_chunk,
+               remat=cfg.remat if remat is None else remat, decode=decode)
+
+
+# --------------------------------------------------------------------------
+# training
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainHarness:
+    cfg: ModelConfig
+    step_fn: Any                 # (params, opt_state, batch) -> (p, s, metrics)
+    init_params: Any
+    init_opt: Any
+    param_sharding: Any = None
+    opt_sharding: Any = None
+    batch_sharding: Any = None
+
+
+def make_train_harness(cfg: ModelConfig, mesh=None, *, lr=3e-4,
+                       grad_clip: float = 1.0,
+                       grad_compression: bool = False,
+                       attn_chunk: int = 512,
+                       microbatches: int = 1,
+                       seq_parallel: bool = False,
+                       extra_overrides=None) -> TrainHarness:
+    model = get_model(cfg)
+    overrides = dict(extra_overrides or {})
+    if seq_parallel:
+        overrides["res_seq"] = ("model",)
+    overrides = overrides or None
+    ctx = make_ctx(cfg, mesh, attn_chunk=attn_chunk,
+                   shard_overrides=overrides)
+    opt = AdamW(lr=lr, state_dtype=jnp.dtype(cfg.optimizer_dtype))
+
+    def init_opt(params):
+        state = opt.init(params)
+        if grad_compression:
+            return {"adam": state, "ef": init_error(params)}
+        return {"adam": state}
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(model.loss_fn)(params, batch, ctx)
+
+    def step_fn(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation: scan over microbatches; activation
+            # memory scales by 1/M at the cost of M sequential passes
+            def split(leaf):
+                return leaf.reshape(microbatches, leaf.shape[0] // microbatches,
+                                    *leaf.shape[1:])
+            ubatches = jax.tree_util.tree_map(split, batch)
+            acc_dt = jnp.dtype(cfg.optimizer_dtype)
+
+            def ub(carry, ubatch):
+                l_acc, g_acc = carry
+                loss, grads = grad_of(params, ubatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+                return (l_acc + loss, g_acc), ()
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(ub, (jnp.float32(0.0), g0),
+                                            ubatches)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = grad_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        if grad_compression:
+            grads, new_ef = compress_decompress(grads, opt_state["ef"])
+        new_p, new_adam = opt.update(grads, opt_state["adam"], params)
+        new_state = {"adam": new_adam}
+        if grad_compression:
+            new_state["ef"] = new_ef
+        return new_p, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return TrainHarness(cfg, step_fn, model.init_params, init_opt)
+
+
+def jit_train_step(harness: TrainHarness, mesh, params_struct, batch_struct):
+    cfg = harness.cfg
+    pspec = param_shardings(mesh, params_struct, cfg)
+    opt_struct = jax.eval_shape(harness.init_opt, params_struct)
+    ospec = opt_sharding_like(mesh, opt_struct, params_struct, cfg)
+    bspec = batch_shardings(mesh, batch_struct)
+    return jax.jit(
+        harness.step_fn,
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(pspec, ospec, None),
+        donate_argnums=(0, 1),
+    ), (pspec, ospec, bspec)
+
+
+def opt_sharding_like(mesh, opt_struct, params_struct, cfg):
+    """Adam m/v (and EF buffers) shard exactly like their parameters
+    (ZeRO-1 falls out of the fsdp axis in the param rules)."""
+    pspec = param_shardings(mesh, params_struct, cfg)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("adam",):
+                    out[k] = type(v)(
+                        step=jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec()),
+                        m=pspec, v=pspec)
+                elif k == "ef":
+                    out[k] = pspec
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+    return walk(opt_struct)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def quantize_param_struct(params_struct, cfg: ModelConfig, qcfg: QuantConfig):
+    """Map an eval_shape param tree to its QTensor deployment layout
+    (ShapeDtypeStructs only — used by the dry-run for serve_step)."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        name = path[-1]
+        if name in QUANT_LEAF_NAMES and node.ndim >= 2 and node.shape[-2] >= 2:
+            *lead, in_f, out_f = node.shape
+            g = resolve_group(in_f, qcfg.group_size)
+            ppb = PACK_FACTOR[qcfg.bits]
+            if in_f % ppb:
+                return node
+            return QTensor(
+                packed=jax.ShapeDtypeStruct((*lead, in_f // ppb, out_f),
+                                            jnp.uint8),
+                scale=jax.ShapeDtypeStruct((*lead, in_f // g, out_f),
+                                           jnp.float32),
+                zero=jax.ShapeDtypeStruct((*lead, in_f // g, out_f),
+                                          jnp.float32),
+                bits=qcfg.bits, group_size=g, shape=(in_f, out_f),
+                act_scale=None)
+        return node
+    return walk(params_struct, ())
+
+
+def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
+                     attn_chunk: int = 512, extra_overrides=None,
+                     kv_bits=None):
+    model = get_model(cfg)
+    import dataclasses as _dc
+    ctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
+                   remat=False, shard_overrides=extra_overrides)
+    ctx = _dc.replace(ctx, kv_bits=kv_bits)
+    # decode: Sq == 1, so run attention un-chunked (single scan trip) — the
+    # score row is tiny and GSPMD can then partition the softmax reduction
+    # over a sequence-sharded KV cache (GQA kv_heads < TP case)
+    dctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=1 << 30,
+                    remat=False, decode=True, shard_overrides=extra_overrides)
+    dctx = _dc.replace(dctx, kv_bits=kv_bits)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache, ctx)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, dctx)
+
+    return model, prefill_step, decode_step
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, per arch x shape)
+# --------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        F = cfg.frontend_len or S
+        batch["frames"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        # patches + text = S tokens total
+        batch["tokens"] = jax.ShapeDtypeStruct(
+            (B, S - cfg.num_patches + 1), jnp.int32)
+    return batch
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      kv_bits=None) -> Dict:
+    """decode-step inputs: one new token against a seq_len KV cache."""
+    model = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.int8 if kv_bits == 8 else jnp.bfloat16
+    cache = jax.eval_shape(partial(model.init_cache, B, S, dtype=dt))
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    model = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(model.init_cache, B, S))
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        F = cfg.frontend_len or S
+        batch["frames"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.num_patches),
+                                               jnp.int32)
+    return {"batch": batch, "cache": cache}

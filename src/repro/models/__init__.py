@@ -1,0 +1,4 @@
+from repro.models.common import Ctx, DEFAULT_CTX
+from repro.models.registry import Model, get_model
+
+__all__ = ["Ctx", "DEFAULT_CTX", "Model", "get_model"]

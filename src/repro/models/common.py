@@ -1,0 +1,87 @@
+"""Shared forward-context and cache plumbing for the model zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _identity_shard(x, names):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call forward context.
+
+    ``shard(x, logical_names)`` applies a sharding constraint (identity when
+    running un-meshed); ``ep_axis`` names the mesh axis experts are sharded
+    over (None = single-device local MoE); ``act_bits`` turns on per-token
+    activation fake-quant in inference paths (W4A4 etc.).
+    """
+    shard: Callable = _identity_shard
+    mesh: Any = None
+    ep_axis: Optional[str] = None
+    dp_axes: tuple = ()            # mesh axes the batch/token dim is sharded over
+    act_bits: Optional[int] = None
+    # int8 KV cache (beyond-paper, §Perf A4): static-scale symmetric
+    # quantization of cache entries; scale calibrated offline (default is a
+    # conservative bound for post-RoPE keys/values at unit-variance init)
+    kv_bits: Optional[int] = None
+    kv_scale: float = 0.05
+    attn_chunk: int = 512
+    remat: bool = False
+    decode: bool = False
+
+
+DEFAULT_CTX = Ctx()
+
+
+def maybe_remat(fn, ctx: Ctx):
+    return jax.checkpoint(fn) if ctx.remat else fn
+
+
+def take_layer(params, i):
+    """Slice layer ``i`` out of stacked (L, ...) block params."""
+    return jax.tree_util.tree_map(lambda a: a[i], params)
+
+
+def layer_loop(step, carry, xs, unroll: bool):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    ``unroll`` (used by the dry-run's depth-differencing cost accounting —
+    cost_analysis counts a scan body once regardless of trip count)."""
+    if not unroll:
+        return jax.lax.scan(step, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        carry, y = step(carry, take_layer(xs, i))
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def update_cache(cache_k, cache_v, k, v, pos):
+    """Insert k,v (B, S_new, H, D) into caches (B, S_max, H, D) at ``pos``.
+
+    ``pos`` is (B,) per-request write offsets (ragged batches supported).
+    Decode (S_new == 1) uses a broadcast-compare masked write instead of a
+    scatter: a scatter onto a sequence-sharded cache forces GSPMD into an
+    "involuntary full rematerialization" (replicate + repartition of the
+    whole multi-TB cache), while the masked write partitions cleanly
+    (§Perf iteration A1).
+    """
+    B, S_new = k.shape[0], k.shape[1]
+    if S_new == 1:
+        S = cache_k.shape[1]
+        m = (jnp.arange(S)[None, :] == pos[:, None])[:, :, None, None]
+        cache_k = jnp.where(m, k.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(m, v.astype(cache_v.dtype), cache_v)
+        return cache_k, cache_v
+    idx = pos[:, None] + jnp.arange(S_new)[None, :]            # (B, S_new)
+    b = jnp.arange(B)[:, None]
+    cache_k = cache_k.at[b, idx].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[b, idx].set(v.astype(cache_v.dtype))
+    return cache_k, cache_v

@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder backbone.  The conv/mel frontend is a STUB
+per the assignment: ``input_specs`` provides precomputed frame embeddings
+(B, frames, d); everything downstream (encoder stack, causal decoder with
+self- and cross-attention, KV caches) is real."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
+                                 update_cache)
+
+
+def _init_attn(ks, d, n_heads_d, kv_heads_d, hd, n_layers, dt):
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, (n_layers,) + shape, jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+    return {
+        "wq": w(ks[0], (d, n_heads_d * hd), d),
+        "wk": w(ks[1], (d, kv_heads_d * hd), d),
+        "wv": w(ks[2], (d, kv_heads_d * hd), d),
+        "wo": w(ks[3], (n_heads_d * hd, d), n_heads_d * hd),
+    }
+
+
+def _init_stack(cfg, key, n_layers, cross: bool) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 16)
+    p = {
+        "ln1": jnp.ones((n_layers, d), dt),
+        "attn": _init_attn(ks[0:4], d, cfg.num_heads, cfg.num_kv_heads, hd,
+                           n_layers, dt),
+        "ln_m": jnp.ones((n_layers, d), dt),
+        "w_up": (jax.random.normal(ks[8], (n_layers, d, f), jnp.float32)
+                 * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[9], (n_layers, f, d), jnp.float32)
+                   * f ** -0.5).astype(dt),
+    }
+    if cross:
+        p["ln_x"] = jnp.ones((n_layers, d), dt)
+        p["xattn"] = _init_attn(ks[4:8], d, cfg.num_heads, cfg.num_kv_heads,
+                                hd, n_layers, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "encoder": _init_stack(cfg, k2, cfg.encoder_layers, cross=False),
+        "decoder": _init_stack(cfg, k3, cfg.num_layers, cross=True),
+        "ln_enc": jnp.ones((cfg.d_model,), dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": L.dense_init(k4, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
+          cache_pos=None, kv_len=None, precomputed_kv=None):
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.matmul(x, ap["wq"]).reshape(B, S, cfg.num_heads, hd)
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+        new_kv = None
+    else:
+        k = L.matmul(kv_src, ap["wk"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, hd)
+        v = L.matmul(kv_src, ap["wv"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, hd)
+        new_kv = None
+        if kv_cache is not None:
+            ck, cv = update_cache(kv_cache["k"], kv_cache["v"], k, v, cache_pos)
+            new_kv = {"k": ck, "v": cv}
+            k, v = ck, cv
+    o = L.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len, chunk=ctx.attn_chunk)
+    o = o.reshape(B, S, cfg.num_heads * hd)
+    return L.matmul(o, ap["wo"]), new_kv
+
+
+def _mlp(bp, x, cfg, ctx):
+    h = L.layer_norm(x, bp["ln_m"], jnp.zeros_like(bp["ln_m"]), cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    return L.matmul(jax.nn.gelu(L.matmul(h, bp["w_up"])), bp["w_down"])
+
+
+def encoder_block(bp, x, cfg, ctx):
+    h = L.layer_norm(x, bp["ln1"], jnp.zeros_like(bp["ln1"]), cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    a, _ = _attn(bp["attn"], h, h, cfg, ctx, causal=False)
+    x = x + a
+    x = x + _mlp(bp, x, cfg, ctx)
+    return ctx.shard(x, ("batch", "res_seq", "embed"))
+
+
+def decoder_block(bp, x, enc_out, cfg, ctx, *, q_offset=0, self_kv=None,
+                  cache_pos=None, kv_len=None, cross_kv=None):
+    h = L.layer_norm(x, bp["ln1"], jnp.zeros_like(bp["ln1"]), cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    a, new_self = _attn(bp["attn"], h, h, cfg, ctx, causal=True,
+                        q_offset=q_offset, kv_cache=self_kv,
+                        cache_pos=cache_pos, kv_len=kv_len)
+    x = x + a
+    hx = L.layer_norm(x, bp["ln_x"], jnp.zeros_like(bp["ln_x"]), cfg.norm_eps)
+    if ctx.act_bits:
+        hx = L.fake_quant_act(hx, ctx.act_bits)
+    xa, _ = _attn(bp["xattn"], hx, enc_out, cfg, ctx, causal=False,
+                  precomputed_kv=cross_kv)
+    x = x + xa
+    x = x + _mlp(bp, x, cfg, ctx)
+    return ctx.shard(x, ("batch", "res_seq", "embed")), new_self
+
+
+def encode(params, cfg: ModelConfig, frames, ctx: Ctx = DEFAULT_CTX):
+    """frames: precomputed (B, F, d) frontend embeddings (stub)."""
+    x = frames + L.sinusoidal_pos(frames.shape[1], cfg.d_model, frames.dtype)[None]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, bp):
+        return encoder_block(bp, h, cfg, ctx), ()
+
+    x, _ = layer_loop(maybe_remat(step, ctx), x, params["encoder"],
+                      cfg.unroll_layers)
+    return L.layer_norm(x, params["ln_enc"], jnp.zeros_like(params["ln_enc"]),
+                        cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, frames, tokens, ctx: Ctx = DEFAULT_CTX):
+    enc = encode(params, cfg, frames, ctx)
+    x = params["embed"][tokens]
+    x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, bp):
+        h, _ = decoder_block(bp, h, enc, cfg, ctx)
+        return h, ()
+
+    x, _ = layer_loop(maybe_remat(step, ctx), x, params["decoder"],
+                      cfg.unroll_layers)
+    x = L.layer_norm(x, params["ln_f"], jnp.zeros_like(params["ln_f"]),
+                     cfg.norm_eps)
+    return L.matmul(x, params["head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, batch["frames"], tokens[:, :-1],
+                     ctx).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    F = cfg.frontend_len
+    Ld = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "self_v": jnp.zeros((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        # cross-attention K/V computed once from encoder output at prefill
+        "cross_k": jnp.zeros((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, cache,
+            ctx: Ctx = DEFAULT_CTX):
+    enc = encode(params, cfg, frames, ctx)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = x + L.sinusoidal_pos(S, cfg.d_model, x.dtype)[None]
+    pos0 = jnp.zeros((B,), jnp.int32)
+    hd = cfg.resolved_head_dim
+
+    def step(h, layer):
+        bp, sk, sv = layer
+        ck = L.matmul(enc, bp["xattn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, hd)
+        cv = L.matmul(enc, bp["xattn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, hd)
+        h, new_self = decoder_block(bp, h, enc, cfg, ctx,
+                                    self_kv={"k": sk, "v": sv},
+                                    cache_pos=pos0, cross_kv=(ck, cv))
+        return h, (new_self["k"], new_self["v"], ck, cv)
+
+    x, (nk, nv, ck, cv) = layer_loop(
+        step, x, (params["decoder"], cache["self_k"], cache["self_v"]),
+        cfg.unroll_layers)
+    new_cache = {"self_k": nk, "self_v": nv,
+                 "cross_k": ck.astype(cache["cross_k"].dtype),
+                 "cross_v": cv.astype(cache["cross_v"].dtype)}
+    x = L.layer_norm(x[:, -1:], params["ln_f"], jnp.zeros_like(params["ln_f"]),
+                     cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                ctx: Ctx = DEFAULT_CTX):
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]
+    # position embedding at the current position (gather one row per request)
+    pe = L.sinusoidal_pos(int(cache["self_k"].shape[2]), cfg.d_model, x.dtype)
+    x = x + pe[pos][:, None, :]
+
+    def step(h, layer):
+        bp, sk, sv, ck, cv = layer
+        h, new_self = decoder_block(bp, h, None, cfg, ctx, q_offset=pos,
+                                    self_kv={"k": sk, "v": sv}, cache_pos=pos,
+                                    kv_len=pos + 1, cross_kv=(ck, cv))
+        return h, (new_self["k"], new_self["v"])
+
+    x, (nk, nv) = layer_loop(
+        step, x, (params["decoder"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]), cfg.unroll_layers)
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    x = L.layer_norm(x, params["ln_f"], jnp.zeros_like(params["ln_f"]),
+                     cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache

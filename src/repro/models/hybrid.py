@@ -1,0 +1,149 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with one SHARED attention+FFN block
+applied every ``cfg.attn_every`` layers (weights reused at every application,
+each application site keeping its own KV cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm, transformer
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
+                                 take_layer, update_cache)
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def _segments(cfg: ModelConfig):
+    """[(start, end, has_attn_after)] covering all mamba layers."""
+    segs, s = [], 0
+    while s < cfg.num_layers:
+        e = min(s + cfg.attn_every, cfg.num_layers)
+        segs.append((s, e, e - s == cfg.attn_every))
+        s = e
+    return segs
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shared_cfg = cfg.replace(family="dense")
+    return {
+        "embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "blocks": ssm.init_mamba_block(cfg, k2, cfg.num_layers),
+        # one shared transformer block (n_layers=1, squeezed at use site)
+        "shared_attn": transformer.init_block_params(shared_cfg, k3, 1),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": L.dense_init(k4, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _shared_block(params, x, cfg, ctx, *, positions, kv_cache=None,
+                  cache_pos=None, kv_len=None):
+    bp = take_layer(params["shared_attn"], 0)
+    return transformer.block(bp, x, cfg.replace(family="dense"), ctx,
+                             positions=positions, kv_cache=kv_cache,
+                             cache_pos=cache_pos, kv_len=kv_len)
+
+
+def _slice_seg(tree, s, e):
+    return jax.tree_util.tree_map(lambda a: a[s:e], tree)
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def mk_step():
+        def step(h, bp):
+            h, _, _ = ssm.mamba_block(bp, h, cfg, ctx)
+            return h, ()
+        return maybe_remat(step, ctx)
+
+    for (s, e, attn_after) in _segments(cfg):
+        x, _ = layer_loop(mk_step(), x, _slice_seg(params["blocks"], s, e),
+                          cfg.unroll_layers)
+        if attn_after:
+            x, _ = _shared_block(params, x, cfg, ctx, positions=positions)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], ctx).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    n_sites = n_attn_sites(cfg)
+    return {
+        "mamba": ssm.init_mamba_cache(cfg, batch, cfg.num_layers),
+        "attn_k": jnp.zeros((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "attn_v": jnp.zeros((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode):
+    """Shared prefill/decode body over segments."""
+    new_mamba_conv, new_mamba_ssm = [], []
+    new_k, new_v = [], []
+    site = 0
+    for (s, e, attn_after) in _segments(cfg):
+        def step(h, layer):
+            bp, conv, sst = layer
+            h, nc, ns = ssm.mamba_block(bp, h, cfg, ctx, conv_state=conv,
+                                        ssm_state=sst, decode=decode)
+            return h, (nc, ns)
+
+        seg = (_slice_seg(params["blocks"], s, e),
+               cache["mamba"]["conv"][s:e], cache["mamba"]["ssm"][s:e])
+        x, (ncs, nss) = layer_loop(step, x, seg, cfg.unroll_layers)
+        new_mamba_conv.append(ncs)
+        new_mamba_ssm.append(nss)
+        if attn_after:
+            kv = {"k": cache["attn_k"][site], "v": cache["attn_v"][site]}
+            x, nkv = _shared_block(params, x, cfg, ctx, positions=positions,
+                                   kv_cache=kv, cache_pos=cache_pos,
+                                   kv_len=kv_len)
+            new_k.append(nkv["k"])
+            new_v.append(nkv["v"])
+            site += 1
+    new_cache = {
+        "mamba": {"conv": jnp.concatenate(new_mamba_conv),
+                  "ssm": jnp.concatenate(new_mamba_ssm)},
+        "attn_k": jnp.stack(new_k) if new_k else cache["attn_k"],
+        "attn_v": jnp.stack(new_v) if new_v else cache["attn_v"],
+    }
+    return x, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    B, S = tokens.shape
+    pos0 = jnp.zeros((B,), jnp.int32)
+    x, new_cache = _run(params, cfg, x, cache, ctx, positions=jnp.arange(S),
+                        cache_pos=pos0, kv_len=None, decode=False)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens][:, None, :]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    x, new_cache = _run(params, cfg, x, cache, ctx, positions=pos[:, None],
+                        cache_pos=pos, kv_len=pos + 1, decode=True)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache

@@ -1,0 +1,280 @@
+"""Shared neural building blocks: norms, RoPE, flash-style attention, matmul
+dispatch over plain / quantized (QTensor) weights, per-token activation
+fake-quant.
+
+All modules are pure functions over param dicts; weights use the convention
+``(in_features, out_features)`` (experts: ``(E, in, out)``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor, qmatmul
+
+
+# --------------------------------------------------------------------------
+# matmul dispatch (the single entry point the quantizer swaps weights under)
+# --------------------------------------------------------------------------
+
+_KERNEL_BACKEND = None
+
+
+def _use_pallas() -> bool:
+    """Backend switch for QTensor matmuls: REPRO_KERNEL_BACKEND=pallas routes
+    through the fused Pallas dequant-matmul (interpret-mode on CPU)."""
+    global _KERNEL_BACKEND
+    if _KERNEL_BACKEND is None:
+        import os
+        _KERNEL_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+    return _KERNEL_BACKEND == "pallas"
+
+
+def matmul(x: jax.Array, w) -> jax.Array:
+    if isinstance(w, QTensor):
+        if _use_pallas():
+            from repro.kernels.ops import qtensor_matmul
+            return qtensor_matmul(x, w)
+        return qmatmul(x, w)
+    return x @ w
+
+
+def expert_matmul(a: jax.Array, w) -> jax.Array:
+    """Batched per-expert matmul: (E, C, d) x (E, d, f) -> (E, C, f)."""
+    if isinstance(w, QTensor):
+        if w.act_scale is not None:
+            a = a / w.act_scale.astype(a.dtype)
+        w = w.dequantize(a.dtype)
+    return jnp.einsum("ecd,edf->ecf", a, w)
+
+
+def fake_quant_act(x: jax.Array, bits: int, symmetric: bool = True) -> jax.Array:
+    """Per-token dynamic activation quantization (simulated).
+
+    Quantizes over the last dim per token; straight-through in the sense that
+    it is only used in inference paths (no gradient needed).
+    """
+    qmax = (1 << bits) - 1
+    xf = x.astype(jnp.float32)
+    if symmetric:
+        amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / ((qmax - 1) / 2)
+        q = jnp.clip(jnp.round(xf / scale), -(qmax + 1) // 2, qmax // 2)
+        return (q * scale).astype(x.dtype)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / qmax
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(xf / scale) + zero, 0, qmax)
+    return ((q - zero) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms / embeddings / positional
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention: online softmax over KV chunks, O(chunk) memory, with a
+# FlashAttention-2 style custom backward (recompute scores per chunk) so the
+# scan does not checkpoint O(Sq x D) residuals per step — this is what keeps
+# 32k-token training under the HBM budget (EXPERIMENTS.md §Dry-run).
+# --------------------------------------------------------------------------
+
+def _mask_for(idx, csz, q_pos, valid_len, causal, prefix_len):
+    k_pos = idx * csz + jnp.arange(csz, dtype=jnp.float32)
+    mask = k_pos[None, None, None, None, :] < valid_len[:, None, None, None, None]
+    if causal:
+        cm = k_pos[None, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if prefix_len is not None:
+            # prefix-LM (paligemma): the image/prompt prefix attends fully
+            cm = cm | (k_pos[None, None, None, None, :] < prefix_len)
+        mask = mask & cm
+    return mask
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_core(q, k, v, q_pos, valid_len, causal, prefix_len, chunk, scale):
+    out, _ = _flash_fwd(q, k, v, q_pos, valid_len, causal, prefix_len,
+                        chunk, scale)
+    return out
+
+
+def _flash_fwd(q, k, v, q_pos, valid_len, causal, prefix_len, chunk, scale):
+    """q: (B,Hkv,G,Sq,D) f32*scale applied; k,v: (N,B,Hkv,C,D)."""
+    B, Hkv, G, Sq, D = q.shape
+    csz = k.shape[3]
+
+    def step(carry, kv):
+        m, l, acc, idx = carry
+        kb, vb = kv
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", q, kb.astype(jnp.float32))
+        mask = _mask_for(idx, csz, q_pos, valid_len, causal, prefix_len)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new, idx + 1), ()
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (k, v))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _flash_core_fwd(q, k, v, q_pos, valid_len, causal, prefix_len, chunk,
+                    scale):
+    out, lse = _flash_fwd(q, k, v, q_pos, valid_len, causal, prefix_len,
+                          chunk, scale)
+    return out, (q, k, v, q_pos, valid_len, out, lse)
+
+
+def _flash_core_bwd(causal, prefix_len, chunk, scale, res, dout):
+    q, k, v, q_pos, valid_len, out, lse = res
+    csz = k.shape[3]
+    delta = jnp.sum(dout * out, axis=-1)                       # (B,Hkv,G,Sq)
+
+    def step(dq, kvi):
+        kb, vb, idx = kvi
+        kf, vf = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", q, kf)
+        mask = _mask_for(idx, csz, q_pos, valid_len, causal, prefix_len)
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        dvb = jnp.einsum("bhgqc,bhgqd->bhcd", p, dout)
+        dp = jnp.einsum("bhgqd,bhcd->bhgqc", dout, vf)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bhgqc,bhcd->bhgqd", ds, kf)
+        dkb = jnp.einsum("bhgqc,bhgqd->bhcd", ds, q)
+        return dq, (dkb.astype(kb.dtype), dvb.astype(vb.dtype))
+
+    idxs = jnp.arange(k.shape[0], dtype=jnp.int32)
+    dq0 = jnp.zeros_like(q)
+    dq, (dk, dv) = jax.lax.scan(step, dq0, (k, v, idxs))
+    return (dq, dk, dv, jnp.zeros_like(q_pos), jnp.zeros_like(valid_len))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    q_offset=0,
+                    kv_len: Optional[jax.Array] = None,
+                    chunk: int = 512,
+                    scale: Optional[float] = None,
+                    prefix_len: Optional[int] = None) -> jax.Array:
+    """Chunked attention with GQA support.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (scalar or (B,)) for causal masks
+    during decode.  ``kv_len``: (B,) valid KV length (cache masking).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
+    qf = qf.transpose(0, 2, 3, 1, 4)                           # (B,Hkv,G,Sq,D)
+
+    if Sq == 1:
+        # decode fast path: single score row, no chunk reshape/transpose of
+        # the (large, sharded) cache — GSPMD partitions the softmax over a
+        # sequence-sharded cache with two small psums (§Perf iteration A3)
+        q_pos1 = jnp.asarray(q_offset, jnp.float32).reshape(-1)[:, None]
+        q_pos1 = jnp.broadcast_to(q_pos1, (B, 1))
+        valid1 = (kv_len.astype(jnp.float32) if kv_len is not None
+                  else jnp.full((B,), float(Sk), jnp.float32))
+        s = jnp.einsum("bhgqd,bshd->bhgqs", qf, k.astype(jnp.float32))
+        k_pos = jnp.arange(Sk, dtype=jnp.float32)
+        mask = k_pos[None, None, None, None, :] < valid1[:, None, None, None, None]
+        if causal:
+            cm = (k_pos[None, None, None, None, :]
+                  <= q_pos1[:, None, None, :, None])
+            if prefix_len is not None:
+                cm = cm | (k_pos[None, None, None, None, :] < prefix_len)
+            mask = mask & cm
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqs,bshd->bhgqd", p, v.astype(jnp.float32))
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+        return out.astype(q.dtype)
+
+    csz = min(chunk, Sk)
+    pad = (-Sk) % csz
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Skp = k.shape[1]
+    kc = k.reshape(B, Skp // csz, csz, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, Skp // csz, csz, Hkv, D).transpose(1, 0, 3, 2, 4)
+
+    q_pos = jnp.asarray(q_offset, jnp.float32)[..., None] + jnp.arange(
+        Sq, dtype=jnp.float32)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    q_pos = jnp.broadcast_to(q_pos, (B, Sq))
+    valid_len = (kv_len.astype(jnp.float32) if kv_len is not None
+                 else jnp.full((B,), float(Sk), jnp.float32))
+
+    out = _flash_core(qf, kc, vc, q_pos, valid_len, causal, prefix_len,
+                      csz, scale)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = matmul(x, w_gate)
+    u = matmul(x, w_up)
+    return matmul(jax.nn.silu(g) * u, w_down)

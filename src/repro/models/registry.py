@@ -1,0 +1,95 @@
+"""Uniform model API over all families.
+
+``get_model(cfg)`` returns a ``Model`` with:
+    init_params(key) -> params
+    loss_fn(params, batch, ctx) -> scalar           (train step core)
+    prefill(params, batch, cache, ctx) -> (logits, cache)
+    decode_step(params, cache, tokens, pos, ctx) -> (logits, cache)
+    init_cache(batch, max_seq, dtype) -> cache
+Batches are dicts: {"tokens"} (+ "frames" for encdec, "patches" for vlm).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, rwkv, transformer, vlm
+from repro.models.common import Ctx, DEFAULT_CTX
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return Model(
+            cfg,
+            init_params=lambda key: transformer.init_params(cfg, key),
+            loss_fn=lambda p, b, ctx=DEFAULT_CTX: transformer.loss_fn(p, cfg, b, ctx),
+            prefill=lambda p, b, c, ctx=DEFAULT_CTX: transformer.prefill(
+                p, cfg, b["tokens"], c, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
+                transformer.decode_step(p, cfg, c, t, pos, ctx),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                transformer.init_cache(cfg, batch, max_seq, dtype),
+        )
+    if fam == "rwkv":
+        return Model(
+            cfg,
+            init_params=lambda key: rwkv.init_params(cfg, key),
+            loss_fn=lambda p, b, ctx=DEFAULT_CTX: rwkv.loss_fn(p, cfg, b, ctx),
+            prefill=lambda p, b, c, ctx=DEFAULT_CTX: rwkv.prefill(
+                p, cfg, b["tokens"], c, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
+                rwkv.decode_step(p, cfg, c, t, pos, ctx),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                rwkv.init_cache(cfg, batch, max_seq, dtype),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg,
+            init_params=lambda key: hybrid.init_params(cfg, key),
+            loss_fn=lambda p, b, ctx=DEFAULT_CTX: hybrid.loss_fn(p, cfg, b, ctx),
+            prefill=lambda p, b, c, ctx=DEFAULT_CTX: hybrid.prefill(
+                p, cfg, b["tokens"], c, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
+                hybrid.decode_step(p, cfg, c, t, pos, ctx),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                hybrid.init_cache(cfg, batch, max_seq, dtype),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg,
+            init_params=lambda key: encdec.init_params(cfg, key),
+            loss_fn=lambda p, b, ctx=DEFAULT_CTX: encdec.loss_fn(p, cfg, b, ctx),
+            prefill=lambda p, b, c, ctx=DEFAULT_CTX: encdec.prefill(
+                p, cfg, b["frames"], b["tokens"], c, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
+                encdec.decode_step(p, cfg, c, t, pos, ctx),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                encdec.init_cache(cfg, batch, max_seq, dtype),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg,
+            init_params=lambda key: vlm.init_params(cfg, key),
+            loss_fn=lambda p, b, ctx=DEFAULT_CTX: vlm.loss_fn(p, cfg, b, ctx),
+            prefill=lambda p, b, c, ctx=DEFAULT_CTX: vlm.prefill(
+                p, cfg, b["patches"], b["tokens"], c, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
+                vlm.decode_step(p, cfg, c, t, pos, ctx),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
+                vlm.init_cache(cfg, batch, max_seq, dtype),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,214 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent per-channel decay.
+
+Time-mix (wkv6) uses the shared chunked linear-attention engine with
+*exclusive* masking plus the diag-u bonus; decay is produced per token per
+channel via a low-rank (LoRA) head on the shifted input — the defining RWKV6
+feature.  Channel-mix is the squared-ReLU two-matrix FFN.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
+                                 take_layer)
+from repro.models.ssm import chunked_linear_attention, step_linear_attention
+
+DECAY_LORA = 64
+
+
+def init_block_params(cfg: ModelConfig, key, n_layers: int) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    lora = min(DECAY_LORA, d // 2)
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, (n_layers,) + shape, jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+
+    return {
+        "ln1": jnp.ones((n_layers, d), dt),
+        "ln2": jnp.ones((n_layers, d), dt),
+        # token-shift mix coefficients for r,k,v,g,w and channel-mix r,k
+        "mu": jnp.full((n_layers, 7, d), 0.5, dt),
+        "wr": w(ks[0], (d, d), d),
+        "wk": w(ks[1], (d, d), d),
+        "wv": w(ks[2], (d, d), d),
+        "wg": w(ks[3], (d, d), d),
+        "wo": w(ks[4], (d, d), d),
+        # data-dependent decay: w = -exp(w0 + tanh(x A) B)
+        "w0": jnp.full((n_layers, d), -2.0, jnp.float32),
+        "wA": w(ks[5], (d, lora), d).astype(jnp.float32),
+        "wB": (jax.random.normal(ks[6], (n_layers, lora, d), jnp.float32)
+               * 0.01),
+        "u": jnp.zeros((n_layers, H, Dh), jnp.float32),        # bonus
+        "gn": jnp.ones((n_layers, d), dt),                     # per-head norm
+        # channel mix
+        "ck": w(ks[7], (d, cfg.d_ff), d),
+        "cv": w(ks[8], (cfg.d_ff, d), cfg.d_ff),
+        "cr": w(ks[9], (d, d), d),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "blocks": init_block_params(cfg, k2, cfg.num_layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": L.dense_init(k3, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1}. ``last`` (B,1,d) is the cached previous token."""
+    if x.shape[1] == 1 and last is not None:
+        return last
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        prev = prev.at[:, :1].set(last)
+    return prev
+
+
+def time_mix(bp, x, cfg: ModelConfig, ctx: Ctx, *, shift_state=None,
+             wkv_state=None, decode=False):
+    B, S, d = x.shape
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    xs = _shift(x, shift_state)
+    mu = bp["mu"]
+
+    def mix(i):
+        return x + (xs - x) * mu[i][None, None, :]
+
+    if ctx.act_bits:
+        mixed = [L.fake_quant_act(mix(i), ctx.act_bits) for i in range(5)]
+    else:
+        mixed = [mix(i) for i in range(5)]
+    r = L.matmul(mixed[0], bp["wr"]).reshape(B, S, H, Dh)
+    k = L.matmul(mixed[1], bp["wk"]).reshape(B, S, H, Dh)
+    v = L.matmul(mixed[2], bp["wv"]).reshape(B, S, H, Dh)
+    g = jax.nn.silu(L.matmul(mixed[3], bp["wg"]))
+    # data-dependent decay (per channel), clamped for stability
+    lora = jnp.tanh(mixed[4].astype(jnp.float32) @ bp["wA"]) @ bp["wB"]
+    log_decay = -jnp.exp(jnp.clip(bp["w0"][None, None, :] + lora, -10.0, 4.0))
+    log_decay = log_decay.reshape(B, S, H, Dh)
+
+    if decode:
+        y1, new_state = step_linear_attention(
+            wkv_state, r[:, 0], k[:, 0], v[:, 0], log_decay[:, 0],
+            inclusive=False, u=bp["u"])
+        y = y1[:, None]
+    else:
+        y, new_state = chunked_linear_attention(
+            r, k, v, log_decay, inclusive=False, u=bp["u"],
+            chunk=cfg.ssm.chunk_size, initial_state=wkv_state)
+    # per-head group norm then output gate
+    yf = y.reshape(B, S, H, Dh).astype(jnp.float32)
+    yf = (yf - yf.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yf.var(-1, keepdims=True) + 64e-5)
+    yf = yf.reshape(B, S, d).astype(x.dtype) * bp["gn"][None, None, :]
+    out = L.matmul(yf * g, bp["wo"])
+    return out, x[:, -1:], new_state
+
+
+def channel_mix(bp, x, cfg: ModelConfig, ctx: Ctx, *, shift_state=None):
+    xs = _shift(x, shift_state)
+    mu = bp["mu"]
+    xk = x + (xs - x) * mu[5][None, None, :]
+    xr = x + (xs - x) * mu[6][None, None, :]
+    if ctx.act_bits:
+        xk = L.fake_quant_act(xk, ctx.act_bits)
+        xr = L.fake_quant_act(xr, ctx.act_bits)
+    k = jnp.square(jax.nn.relu(L.matmul(xk, bp["ck"])))
+    kv = L.matmul(k, bp["cv"])
+    return jax.nn.sigmoid(L.matmul(xr, bp["cr"])) * kv, x[:, -1:]
+
+
+def block(bp, x, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *, cache=None,
+          decode=False):
+    """One RWKV block.  cache (per layer): {shift1, shift2, wkv}."""
+    c = cache or {}
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    a, s1, wkv = time_mix(bp, h, cfg, ctx, shift_state=c.get("shift1"),
+                          wkv_state=c.get("wkv"), decode=decode)
+    x = x + a
+    h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    m, s2 = channel_mix(bp, h2, cfg, ctx, shift_state=c.get("shift2"))
+    x = x + m
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    new_cache = {"shift1": s1, "shift2": s2, "wkv": wkv} if cache is not None else None
+    return x, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0, dtype=jnp.bfloat16):
+    """RWKV decode state is O(1) in sequence length (the long_500k story)."""
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    L_, d = cfg.num_layers, cfg.d_model
+    return {
+        "shift1": jnp.zeros((L_, batch, 1, d), dtype),
+        "shift2": jnp.zeros((L_, batch, 1, d), dtype),
+        "wkv": jnp.zeros((L_, batch, H, Dh, Dh), jnp.float32),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, bp):
+        h, _ = block(bp, h, cfg, ctx)
+        return h, ()
+
+    x, _ = layer_loop(maybe_remat(step, ctx), x, params["blocks"],
+                      cfg.unroll_layers)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], ctx).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, layer):
+        bp, c = layer
+        h, nc = block(bp, h, cfg, ctx, cache=c)
+        return h, nc
+
+    x, new_cache = layer_loop(step, x, (params["blocks"], cache),
+                              cfg.unroll_layers)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos=None,
+                ctx: Ctx = DEFAULT_CTX):
+    x = params["embed"][tokens][:, None, :]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, layer):
+        bp, c = layer
+        h, nc = block(bp, h, cfg, ctx, cache=c, decode=True)
+        return h, nc
+
+    x, new_cache = layer_loop(step, x, (params["blocks"], cache),
+                              cfg.unroll_layers)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.matmul(x, params["head"])[:, 0], new_cache

@@ -1,0 +1,241 @@
+"""Chunked linear attention / SSD: the shared engine for Mamba2 (zamba2) and
+RWKV6.
+
+Both recurrences have the form
+    S_t = diag(lambda_t) S_{t-1} + k_t v_t^T          (state: (Dk, Dv) per head)
+with different output taps:
+    mamba2:  y_t = q_t . S_t                  (inclusive; q=C, k=B, v=dt*x)
+    rwkv6:   y_t = q_t . (S_{t-1} + u k_t v_t^T)   (exclusive + bonus u)
+
+The chunked (block-parallel) form processes ``chunk`` tokens at a time:
+intra-chunk contributions via a decay-masked (Q,Q) score matrix, inter-chunk
+via the carried state.  All decay algebra is done with *pairwise log-space
+differences* (exp(a_t - a_s) <= 1), which is numerically safe for arbitrarily
+strong decay — the factored q*exp(a), k*exp(-a) trick overflows and is
+deliberately avoided.
+
+TPU adaptation note: this is the Pallas-kernel shape for linear attention —
+(Q, Q) intra-chunk tiles are MXU-friendly; here it is expressed in pure JAX
+(scan over chunks) so XLA fuses it; the roofline treats it as compute.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(q, k, v, log_decay, *, inclusive: bool,
+                             u: Optional[jax.Array] = None, chunk: int = 64,
+                             initial_state: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """q, k: (B,S,H,Dk); v: (B,S,H,Dv); log_decay: (B,S,H,E) with E in {1, Dk}
+    (per-head scalar decay for mamba2, per-key-dim for rwkv6).  u: (H, Dk).
+
+    Returns (y (B,S,H,Dv), final_state (B,H,Dk,Dv)).
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    E = log_decay.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zp(q), zp(k), zp(v)
+        log_decay = zp(log_decay)
+    N = q.shape[1] // chunk
+
+    def to_chunks(a):
+        # (B, S, H, D) -> (N, B, H, Q, D)
+        return a.reshape(B, N, chunk, H, a.shape[-1]).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ldc = to_chunks(log_decay.astype(jnp.float32))
+
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, Dk, Dv), jnp.float32))
+
+    t_idx = jnp.arange(chunk)
+    mask = (t_idx[:, None] >= t_idx[None, :]) if inclusive \
+        else (t_idx[:, None] > t_idx[None, :])                 # (Q, Q) s<=t / s<t
+
+    def step(state, blk):
+        qb, kb, vb, ld = blk                                   # (B,H,Q,*) f32 ld
+        qb32 = qb.astype(jnp.float32)
+        kb32 = kb.astype(jnp.float32)
+        vb32 = vb.astype(jnp.float32)
+        a = jnp.cumsum(ld, axis=2)                             # inclusive cumdecay
+        a_q = a if inclusive else a - ld                       # query-side tap
+        a_last = a[:, :, -1:, :]                               # (B,H,1,E)
+
+        # ---- inter-chunk: read carried state --------------------------------
+        q_dec = qb32 * jnp.exp(a_q)                            # broadcast E==1 ok
+        y = jnp.einsum("bhtk,bhkv->bhtv", q_dec, state)
+
+        # ---- intra-chunk: pairwise log-space decay ---------------------------
+        diff = a_q[:, :, :, None, :] - a[:, :, None, :, :]     # (B,H,Q,Q,E)
+        diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+        dec = jnp.exp(diff)
+        if E == 1:
+            scores = jnp.einsum("bhtk,bhsk->bhts", qb32, kb32) * dec[..., 0]
+        else:
+            scores = jnp.einsum("bhtk,bhtsk,bhsk->bhts", qb32, dec, kb32)
+        y = y + jnp.einsum("bhts,bhsv->bhtv", scores, vb32)
+
+        if u is not None:                                      # rwkv bonus term
+            uu = u.astype(jnp.float32)[None, :, None, :]
+            y = y + jnp.einsum("bhtk,bhtk,bhtv->bhtv", qb32 * uu, kb32, vb32)
+
+        # ---- state update ----------------------------------------------------
+        k_dec = kb32 * jnp.exp(a_last - a)                     # <= 1, safe
+        state = state * jnp.exp(a_last[:, :, 0, :, None])      # E==1 broadcasts
+        state = state + jnp.einsum("bhsk,bhsv->bhkv", k_dec, vb32)
+        return state, y
+
+    # checkpoint the chunk body: backward recomputes the (Q,Q) intra-chunk
+    # tensors instead of saving them per chunk (carry = small state only)
+    state, ys = jax.lax.scan(jax.checkpoint(step), S0, (qc, kc, vc, ldc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, N * chunk, H, Dv)[:, :S]
+    return y.astype(v.dtype), state
+
+
+def step_linear_attention(state, q, k, v, log_decay, *, inclusive: bool,
+                          u: Optional[jax.Array] = None):
+    """Single-token recurrent step (decode).  q,k: (B,H,Dk); v: (B,H,Dv);
+    log_decay: (B,H,E); state: (B,H,Dk,Dv).  Returns (y (B,H,Dv), new_state)."""
+    q32, k32, v32 = (a.astype(jnp.float32) for a in (q, k, v))
+    ld = log_decay.astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k32, v32)
+    decay = jnp.exp(ld)                                        # (B,H,E)
+    if ld.shape[-1] == 1:
+        new_state = state * decay[..., None] + kv
+    else:
+        new_state = state * decay[..., :, None] + kv
+    if inclusive:
+        y = jnp.einsum("bhk,bhkv->bhv", q32, new_state)
+    else:
+        uu = u.astype(jnp.float32)[None]
+        y = jnp.einsum("bhk,bhkv->bhv", q32, state + uu[..., None] * kv)
+    return y.astype(v.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# --------------------------------------------------------------------------
+
+def init_mamba_block(cfg, key, n_layers: int) -> dict:
+    d = cfg.d_model
+    di = d * cfg.ssm.expand
+    N = cfg.ssm.state_size
+    H = di // cfg.ssm.head_dim
+    W = cfg.ssm.conv_width
+    conv_ch = di + 2 * N
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * N + H                      # z, x, B, C, dt
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, (n_layers,) + shape, jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+
+    return {
+        "ln": jnp.ones((n_layers, d), dt),
+        "in_proj": w(ks[0], (d, proj_out), d),
+        "conv_w": w(ks[1], (W, conv_ch), W).astype(jnp.float32),
+        "conv_b": jnp.zeros((n_layers, conv_ch), jnp.float32),
+        "A_log": jnp.zeros((n_layers, H), jnp.float32),        # A = -exp(A_log)
+        "D": jnp.ones((n_layers, H), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, H), jnp.float32),
+        "out_norm": jnp.ones((n_layers, di), dt),
+        "out_proj": w(ks[2], (di, d), di),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _mamba_inner(bp, x, cfg, *, conv_state=None, ssm_state=None, decode=False):
+    """Core of the mamba2 mixer after the input norm.
+
+    x: (B,S,d). In decode mode S==1 and states are threaded; returns
+    (y, new_conv_state, new_ssm_state)."""
+    from repro.models import layers as L
+    d = cfg.d_model
+    di = d * cfg.ssm.expand
+    N = cfg.ssm.state_size
+    P = cfg.ssm.head_dim
+    H = di // P
+    Wc = cfg.ssm.conv_width
+    B_, S, _ = x.shape
+
+    zxbcdt = L.matmul(x, bp["in_proj"])
+    z, xin, Bs, Cs, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bs, Cs], axis=-1).astype(jnp.float32)
+
+    if decode:
+        full = jnp.concatenate([conv_state, conv_in], axis=1)   # (B, Wc, C)
+        conv = (full * bp["conv_w"][None]).sum(axis=1, keepdims=True) \
+            + bp["conv_b"][None, None, :]
+        new_conv_state = full[:, 1:]
+    else:
+        conv = _causal_conv(conv_in, bp["conv_w"], bp["conv_b"])
+        new_conv_state = conv_in[:, -(Wc - 1):]
+    conv = jax.nn.silu(conv)
+    xc, Bc, Cc = jnp.split(conv, [di, di + N], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + bp["dt_bias"][None, None, :])
+    A = -jnp.exp(bp["A_log"])                                   # (H,) negative
+    log_decay = (dtf * A[None, None, :])[..., None]             # (B,S,H,1)
+
+    xh = xc.reshape(B_, S, H, P)
+    v = xh * dtf[..., None]                                     # dt-weighted input
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B_, S, H, N))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B_, S, H, N))
+
+    if decode:
+        y1, new_ssm = step_linear_attention(
+            ssm_state, q[:, 0], k[:, 0], v[:, 0], log_decay[:, 0],
+            inclusive=True)
+        y = y1[:, None]
+    else:
+        y, new_ssm = chunked_linear_attention(
+            q, k, v, log_decay, inclusive=True, chunk=cfg.ssm.chunk_size,
+            initial_state=ssm_state)
+    y = y + xh.astype(y.dtype) * bp["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z).astype(x.dtype), bp["out_norm"],
+                   cfg.norm_eps).astype(x.dtype)
+    out = L.matmul(y, bp["out_proj"])
+    return out, new_conv_state, new_ssm
+
+
+def mamba_block(bp, x, cfg, ctx, *, conv_state=None, ssm_state=None,
+                decode=False):
+    from repro.models import layers as L
+    h = L.rms_norm(x, bp["ln"], cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    out, ncs, nss = _mamba_inner(bp, h, cfg, conv_state=conv_state,
+                                 ssm_state=ssm_state, decode=decode)
+    return x + out, ncs, nss
+
+
+def init_mamba_cache(cfg, batch: int, n_layers: int):
+    """Decode cache: causal-conv tail + SSM state (B,H,Dk=N,Dv=P) per layer."""
+    d = cfg.d_model
+    di = d * cfg.ssm.expand
+    N = cfg.ssm.state_size
+    P = cfg.ssm.head_dim
+    H = di // P
+    conv_ch = di + 2 * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm.conv_width - 1, conv_ch),
+                          jnp.float32),
+        "ssm": jnp.zeros((n_layers, batch, H, N, P), jnp.float32),
+    }

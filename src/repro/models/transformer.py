@@ -1,0 +1,245 @@
+"""Dense decoder-only transformer (llama family: smollm, tinyllama, llama2-7b,
+command-r-35b, llama3-405b; also the gemma backbone of paligemma).
+
+Layers are stacked along a leading L axis and iterated with ``lax.scan`` so the
+HLO stays O(1) in depth (essential for the 126-layer 405B dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
+                                 update_cache)
+from repro.models.moe import init_moe_ffn, moe_ffn
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key, n_layers: int) -> dict:
+    """Stacked (L, ...) decoder-block params."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+
+    def stack(k, shape, scale=None):
+        sc = scale if scale is not None else shape[-2] ** -0.5
+        return (jax.random.normal(k, (n_layers,) + shape, jnp.float32) * sc).astype(dt)
+
+    p = {
+        "ln1": jnp.ones((n_layers, d), dt),
+        "wq": stack(ks[0], (d, cfg.num_heads * hd)),
+        "wk": stack(ks[1], (d, cfg.num_kv_heads * hd)),
+        "wv": stack(ks[2], (d, cfg.num_kv_heads * hd)),
+        "wo": stack(ks[3], (cfg.num_heads * hd, d)),
+        "ln2": jnp.ones((n_layers, d), dt),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe_ffn(cfg, ks[4], n_layers)
+    else:
+        p["w_gate"] = stack(ks[4], (d, f))
+        p["w_up"] = stack(ks[5], (d, f))
+        p["w_down"] = stack(ks[6], (f, d))
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dt),
+        "blocks": init_block_params(cfg, k2, cfg.num_layers),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k3, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# one decoder block (also the unit TesseraQ reconstructs)
+# --------------------------------------------------------------------------
+
+def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
+              positions, kv_cache=None, cache_pos=None, kv_len=None,
+              prefix_len: Optional[int] = None):
+    """Self-attention with optional KV cache.  Returns (out, new_kv or None)."""
+    Bb, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    q = L.matmul(h, bp["wq"]).reshape(Bb, S, cfg.num_heads, hd)
+    k = L.matmul(h, bp["wk"]).reshape(Bb, S, cfg.num_kv_heads, hd)
+    v = L.matmul(h, bp["wv"]).reshape(Bb, S, cfg.num_kv_heads, hd)
+    if cfg.rope_theta:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    q = ctx.shard(q, ("batch", "seq", "heads", None))
+    k = ctx.shard(k, ("batch", "seq", "kv_heads", None))
+    v = ctx.shard(v, ("batch", "seq", "kv_heads", None))
+
+    new_kv = None
+    if kv_cache is not None:
+        ks, vs = k, v
+        if ctx.kv_bits:
+            qmax = (1 << (ctx.kv_bits - 1)) - 1
+            quant = lambda a: jnp.clip(
+                jnp.round(a.astype(jnp.float32) / ctx.kv_scale),
+                -qmax - 1, qmax).astype(kv_cache["k"].dtype)
+            ks, vs = quant(k), quant(v)
+        ck, cv = update_cache(kv_cache["k"], kv_cache["v"], ks, vs, cache_pos)
+        new_kv = {"k": ck, "v": cv}
+        if ctx.kv_bits:
+            attn_k = ck.astype(x.dtype) * jnp.asarray(ctx.kv_scale, x.dtype)
+            attn_v = cv.astype(x.dtype) * jnp.asarray(ctx.kv_scale, x.dtype)
+        else:
+            attn_k, attn_v = ck, cv
+        q_offset = cache_pos
+        valid = kv_len if kv_len is not None else cache_pos + S
+    else:
+        attn_k, attn_v = k, v
+        q_offset = 0
+        valid = None
+
+    o = L.flash_attention(q, attn_k, attn_v, causal=True, q_offset=q_offset,
+                          kv_len=valid, chunk=ctx.attn_chunk,
+                          prefix_len=prefix_len)
+    o = o.reshape(Bb, S, cfg.num_heads * hd)
+    if ctx.act_bits:
+        o = L.fake_quant_act(o, ctx.act_bits)
+    return L.matmul(o, bp["wo"]), new_kv
+
+
+def ffn(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if ctx.act_bits:
+        h = L.fake_quant_act(h, ctx.act_bits)
+    if cfg.family == "moe":
+        return moe_ffn(bp["moe"], h, cfg, ctx)
+    g = L.matmul(h, bp["w_gate"])
+    u = L.matmul(h, bp["w_up"])
+    a = jax.nn.silu(g) * u
+    if ctx.act_bits:
+        a = L.fake_quant_act(a, ctx.act_bits)
+    return L.matmul(a, bp["w_down"])
+
+
+def block(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *,
+          positions, kv_cache=None, cache_pos=None, kv_len=None,
+          prefix_len=None):
+    a, new_kv = attention(bp, x, cfg, ctx, positions=positions,
+                          kv_cache=kv_cache, cache_pos=cache_pos,
+                          kv_len=kv_len, prefix_len=prefix_len)
+    x = x + a
+    x = x + ffn(bp, x, cfg, ctx)
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    return x, new_kv
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens) -> jax.Array:
+    e = params["embed"][tokens]
+    if cfg.family == "vlm":                      # gemma input scaling
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    return e
+
+
+def unembed(params, cfg: ModelConfig, x) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return L.matmul(x, params["head"])
+
+
+def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX, *,
+            inputs_embeds=None, prefix_len=None) -> jax.Array:
+    """Training/prefill forward without cache.  Returns logits (B, S, V)."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(params, cfg, tokens)
+    B, S = x.shape[:2]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    positions = jnp.arange(S)
+
+    def step(h, bp):
+        h, _ = block(bp, h, cfg, ctx, positions=positions, prefix_len=prefix_len)
+        return h, ()
+
+    x, _ = layer_loop(maybe_remat(step, ctx), x, params["blocks"],
+                      cfg.unroll_layers)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)
+    return ctx.shard(logits, ("batch", "seq", "vocab"))
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
+    """Next-token cross entropy. batch = {tokens, (optional) loss_mask}."""
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], ctx,
+                     inputs_embeds=batch.get("inputs_embeds"))
+    targets = tokens[:, 1:]
+    lw = batch.get("loss_mask")
+    lw = lw[:, 1:] if lw is not None else jnp.ones_like(targets, jnp.float32)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * lw
+    return nll.sum() / jnp.maximum(lw.sum(), 1.0)
+
+
+# -- serving ----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,
+            inputs_embeds=None, prefix_len=None):
+    """Fill cache from position 0; returns (last_logits (B,V), cache)."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(params, cfg, tokens)
+    B, S = x.shape[:2]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+    positions = jnp.arange(S)
+    pos0 = jnp.zeros((B,), jnp.int32)
+
+    def step(h, layer):
+        bp, kv = layer
+        h, new_kv = block(bp, h, cfg, ctx, positions=positions, kv_cache=kv,
+                          cache_pos=pos0, prefix_len=prefix_len)
+        return h, new_kv
+
+    x, new_cache = layer_loop(step, x, (params["blocks"], cache),
+                              cfg.unroll_layers)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)[:, 0]
+    return ctx.shard(logits, ("batch", "vocab")), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                ctx: Ctx = DEFAULT_CTX):
+    """One decode step. tokens: (B,), pos: (B,) current write position."""
+    x = embed_tokens(params, cfg, tokens)[:, None, :]
+    x = ctx.shard(x, ("batch", "res_seq", "embed"))
+
+    def step(h, layer):
+        bp, kv = layer
+        h, new_kv = block(bp, h, cfg, ctx, positions=pos[:, None],
+                          kv_cache=kv, cache_pos=pos, kv_len=pos + 1)
+        return h, new_kv
+
+    x, new_cache = layer_loop(step, x, (params["blocks"], cache),
+                              cfg.unroll_layers)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, cfg, x)[:, 0]
+    return ctx.shard(logits, ("batch", "vocab")), new_cache

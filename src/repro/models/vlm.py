@@ -1,0 +1,50 @@
+"""PaliGemma-style VLM backbone: gemma decoder-only transformer consuming a
+stubbed SigLIP patch-embedding prefix (prefix-LM attention: the image/prompt
+prefix attends bidirectionally, the suffix is causal).
+
+Reuses the dense transformer wholesale; only the input assembly and the
+prefix mask differ."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.common import Ctx, DEFAULT_CTX
+
+init_params = transformer.init_params
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step          # decode past the prefix is standard
+
+
+def assemble_inputs(params, cfg: ModelConfig, patches, tokens):
+    """patches: stub (B, P, d) SigLIP embeddings; tokens: (B, S_text)."""
+    tok = transformer.embed_tokens(params, cfg, tokens)  # gemma-scaled
+    return jnp.concatenate([patches.astype(tok.dtype), tok], axis=1)
+
+
+def forward(params, cfg: ModelConfig, patches, tokens, ctx: Ctx = DEFAULT_CTX):
+    x = assemble_inputs(params, cfg, patches, tokens)
+    return transformer.forward(params, cfg, None, ctx, inputs_embeds=x,
+                               prefix_len=cfg.num_patches)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
+    """CE over the text suffix only."""
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, batch["patches"], tokens[:, :-1],
+                     ctx).astype(jnp.float32)
+    logits = logits[:, cfg.num_patches:]                        # text positions
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def prefill(params, cfg: ModelConfig, patches, tokens, cache,
+            ctx: Ctx = DEFAULT_CTX):
+    x = assemble_inputs(params, cfg, patches, tokens)
+    return transformer.prefill(params, cfg, None, cache, ctx, inputs_embeds=x,
+                               prefix_len=cfg.num_patches)

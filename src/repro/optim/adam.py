@@ -1,0 +1,84 @@
+"""AdamW in pure JAX (no optax dependency), with sharded (ZeRO-1-able) state.
+
+Used both for pretraining (examples/train) and for TesseraQ's Soften-phase
+gradient descent (paper: Adam, lr 1e-3, ~250 steps per PAR iteration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # per-leaf weight-decay mask fn(path, leaf) -> bool; default: decay all
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdamState:
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree_util.tree_map(z, params),
+                         jax.tree_util.tree_map(z, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamState, params,
+               wd_mask=None) -> tuple[Any, AdamState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        lr = self._lr(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(self.state_dtype)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mh = m2 / c1
+            vh = v2 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                dec = self.weight_decay * p.astype(self.state_dtype)
+                delta = delta + dec
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamState(step, new_m, new_v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac=0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

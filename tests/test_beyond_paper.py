@@ -1,0 +1,109 @@
+"""Tests for the beyond-paper features: SignRound baseline, int8 KV cache,
+serve/train launcher fault paths."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import QuantConfig
+from repro.core import quantize_model
+from repro.core.tesseraq import TesseraQConfig
+from repro.models import get_model, transformer
+from repro.models.common import Ctx
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_signround_improves_over_init():
+    cfg = get_reduced_config("llama2-7b").replace(num_layers=2)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                   (4, 24)))}]
+    qcfg = QuantConfig(bits=2, group_size=32)
+    tcfg = TesseraQConfig(par_iterations=2, steps_per_iteration=20)
+    _, _, rep_awq = quantize_model(cfg, params, batches, qcfg,
+                                   method="none", init="awq", tcfg=tcfg)
+    _, _, rep_sr = quantize_model(cfg, params, batches, qcfg,
+                                  method="signround", init="awq", tcfg=tcfg)
+    e_awq = np.mean([b["recon_mse"] for b in rep_awq["blocks"]])
+    e_sr = np.mean([b["recon_mse"] for b in rep_sr["blocks"]])
+    assert e_sr < e_awq
+
+
+def test_signround_codes_consistent():
+    """SignRound's stored codes must dequantize to its fake-quant weights."""
+    from repro.core import quantizer as Q
+    from repro.core.rtn import rtn_leaf
+    from repro.core.signround import _sr_weight
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    qcfg = QuantConfig(bits=3, group_size=16)
+    _, meta = rtn_leaf(w, qcfg)
+    v = jnp.asarray(rng.uniform(-0.4, 0.4, (2, 16, 8)), jnp.float32)
+    wq, q = _sr_weight(w, v, meta["scale"], meta["zero"], qcfg)
+    deq = Q.dequantize_codes(q.reshape(32, 8), meta["scale"], meta["zero"],
+                             qcfg)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(wq), atol=1e-5)
+
+
+def test_int8_kv_cache_decode_accuracy():
+    cfg = get_reduced_config("tinyllama-1.1b").replace(dtype="float32")
+    m = get_model(cfg)
+    p = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)))
+    full = transformer.forward(p, cfg, toks)
+    ctx8 = Ctx(kv_bits=8, kv_scale=0.05)
+    cache = m.init_cache(2, 24, dtype=jnp.int8)
+    _, cache = transformer.prefill(p, cfg, toks[:, :-1], cache, ctx8)
+    lg, _ = transformer.decode_step(p, cfg, cache, toks[:, -1],
+                                    jnp.full((2,), 15, jnp.int32), ctx8)
+    rel = float(jnp.abs(lg - full[:, -1]).max()
+                / jnp.abs(full[:, -1]).max())
+    assert rel < 0.05
+    assert cache["k"].dtype == jnp.int8
+
+
+@pytest.mark.slow
+def test_train_preemption_checkpoint(tmp_path):
+    """SIGTERM mid-run must leave a resumable checkpoint (exit code 2)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-135m",
+         "--reduced", "--steps", "500", "--batch", "2", "--seq", "32",
+         "--ckpt-dir", str(tmp_path), "--ckpt-every", "1000",
+         "--log-every", "1"],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    # wait until it has logged a step, then preempt
+    t0 = time.time()
+    while time.time() - t0 < 240:
+        line = proc.stdout.readline()
+        if line.startswith("step ") and not line.startswith("step     0"):
+            break
+    proc.send_signal(signal.SIGTERM)
+    proc.wait(timeout=240)
+    assert proc.returncode == 2
+    from repro.checkpoint.manager import CheckpointManager
+    assert CheckpointManager(str(tmp_path)).latest_step() is not None
+
+
+@pytest.mark.slow
+def test_serve_launcher_end_to_end():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "tinyllama-1.1b", "--reduced", "--quant", "W4A16g32",
+         "--par-iters", "1", "--par-steps", "5", "--calib-samples", "4",
+         "--requests", "2", "--prompt-len", "8", "--gen", "4"],
+        env=env, capture_output=True, text=True, timeout=480)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-1000:]
+    assert "tok/s" in r.stdout

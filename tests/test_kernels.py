@@ -1,0 +1,80 @@
+"""Per-kernel shape/dtype sweeps, allclose against the ref.py oracles
+(interpret mode executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qtensor import pack
+from repro.kernels import ref
+from repro.kernels.ops import int8_matmul_op, quant_matmul_op, soft_round_op
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(16, 128, 64, 32), (8, 256, 96, 128),
+                                   (33, 64, 40, 64), (1, 64, 24, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_sweep(bits, shape, dtype):
+    M, K, N, g = shape
+    rng = np.random.default_rng(bits * 1000 + M)
+    codes = rng.integers(0, 1 << bits, (K, N)).astype(np.uint8)
+    scale = (rng.random((K // g, N)).astype(np.float32) + 0.5) * 0.1
+    zero = rng.integers(0, 1 << bits, (K // g, N)).astype(np.float32)
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    got = quant_matmul_op(x, packed, jnp.asarray(scale), jnp.asarray(zero),
+                          bits=bits, group_size=g,
+                          block_m=16, block_n=32, block_k=max(g, 64))
+    want = ref.quant_matmul_ref(x, packed, jnp.asarray(scale),
+                                jnp.asarray(zero), bits=bits, group_size=g)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 64), (16, 256, 32), (8, 64, 8)])
+def test_int8_matmul_sweep(shape):
+    M, K, N = shape
+    rng = np.random.default_rng(M)
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    sx = jnp.asarray((rng.random((M, 1)) + .1) * .01, jnp.float32)
+    sw = jnp.asarray((rng.random((1, N)) + .1) * .01, jnp.float32)
+    got = int8_matmul_op(xq, wq, sx, sw)
+    want = ref.int8_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("qmax,dst", [(3, True), (15, False), (255, True)])
+def test_soft_round_sweep(qmax, dst):
+    rng = np.random.default_rng(qmax)
+    ng, g, n = 4, 32, 128
+    base = rng.integers(-2, qmax, (ng, g, n)).astype(np.float32)
+    nu = rng.normal(size=(ng, g, n)).astype(np.float32) * 3
+    hard = rng.integers(-1, 2, (ng, g, n)).astype(np.int32)
+    v = rng.normal(size=(ng, n)).astype(np.float32) * 0.2
+    scale = (rng.random((ng, n)).astype(np.float32) + .5) * .1
+    zero = rng.integers(0, max(qmax // 2, 1), (ng, n)).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (base, nu, hard, v, scale, zero))
+    got = soft_round_op(*args, qmax=qmax, dst=dst)
+    want = ref.soft_round_ref(*args, qmax=qmax, dst=dst)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_w4a8_path():
+    """Dynamic per-token act quant + int kernel vs fp matmul (coarse)."""
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import w4a8_matmul
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=8, group_size=None))
+    x = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    got = np.asarray(w4a8_matmul(x, qt), np.float32)
+    want = np.asarray(x @ w, np.float32)
+    rel = np.abs(got - want).mean() / np.abs(want).mean()
+    assert rel < 0.05

@@ -1,0 +1,128 @@
+"""AWQ / GPTQ / OmniQuant-LWC / rotation behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.awq import awq_leaf
+from repro.core.capture import LinearStats
+from repro.core.gptq import gptq_leaf
+from repro.core.rotation import hadamard, rotate_params
+
+
+def make_stats(X, hessian=False):
+    st = LinearStats()
+    st.update(np.asarray(X), hessian)
+    return st
+
+
+@pytest.fixture
+def skewed_problem():
+    """Input with a few dominant channels — the regime AWQ exists for."""
+    rng = np.random.default_rng(0)
+    n_in, n_out, n = 64, 32, 256
+    X = rng.normal(size=(n, n_in)).astype(np.float32)
+    X[:, :4] *= 20.0                     # outlier channels
+    W = rng.normal(size=(n_in, n_out)).astype(np.float32)
+    return X, jnp.asarray(W)
+
+
+def test_awq_beats_rtn_on_skewed_acts(skewed_problem):
+    X, W = skewed_problem
+    qcfg = QuantConfig(bits=2, group_size=16)
+    y_ref = X @ np.asarray(W)
+    fq_rtn = np.asarray(Q.fake_quantize(W, qcfg))
+    fq_awq, meta = awq_leaf(W, make_stats(X), qcfg)
+    e_rtn = np.mean((X @ fq_rtn - y_ref) ** 2)
+    e_awq = np.mean((X @ np.asarray(fq_awq, np.float32) - y_ref) ** 2)
+    assert e_awq < e_rtn
+    assert meta["act_scale"] is not None
+
+
+def test_gptq_beats_rtn(skewed_problem):
+    X, W = skewed_problem
+    qcfg = QuantConfig(bits=3, group_size=None)
+    y_ref = X @ np.asarray(W)
+    fq_rtn = np.asarray(Q.fake_quantize(W, qcfg))
+    fq_gptq, meta = gptq_leaf(W, make_stats(X, hessian=True), qcfg)
+    e_rtn = np.mean((X @ fq_rtn - y_ref) ** 2)
+    e_gptq = np.mean((X @ np.asarray(fq_gptq, np.float32) - y_ref) ** 2)
+    assert e_gptq < e_rtn
+
+
+def test_gptq_codes_reconstruct_weights(skewed_problem):
+    X, W = skewed_problem
+    qcfg = QuantConfig(bits=4, group_size=16)
+    fq, meta = gptq_leaf(W, make_stats(X, hessian=True), qcfg)
+    deq = Q.dequantize_codes(meta["codes"].astype(jnp.float32),
+                             meta["scale"], meta["zero"], qcfg)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(fq, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hadamard_is_orthogonal():
+    rng = np.random.default_rng(0)
+    for n in (64, 48):
+        H = hadamard(n, rng)
+        np.testing.assert_allclose(H @ H.T, np.eye(n), atol=1e-5)
+
+
+def test_rotation_preserves_model_outputs():
+    from repro.models import get_model
+    cfg = get_reduced_config("llama2-7b").replace(dtype="float32")
+    m = get_model(cfg)
+    p = m.init_params(jax.random.PRNGKey(0))
+    rp = rotate_params(p, cfg, seed=0)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 16)))
+    l0 = float(jax.jit(m.loss_fn)(p, {"tokens": toks}))
+    l1 = float(jax.jit(m.loss_fn)(rp, {"tokens": toks}))
+    assert abs(l0 - l1) < 1e-4
+
+
+def test_rotation_reduces_weight_outliers():
+    """Rotation spreads outlier energy: max/std of rotated weights drops."""
+    from repro.models import get_model
+    cfg = get_reduced_config("llama2-7b").replace(dtype="float32")
+    m = get_model(cfg)
+    p = m.init_params(jax.random.PRNGKey(0))
+    # inject weight outliers in one channel
+    blocks = dict(p["blocks"])
+    wq = np.array(blocks["wq"], np.float32)
+    wq[:, 3, :] *= 30.0
+    blocks["wq"] = jnp.asarray(wq)
+    p = dict(p, blocks=blocks)
+    rp = rotate_params(p, cfg, seed=0)
+
+    def kurt(a):
+        a = np.asarray(a, np.float32).ravel()
+        return np.abs(a).max() / a.std()
+
+    assert kurt(rp["blocks"]["wq"]) < kurt(p["blocks"]["wq"])
+
+
+def test_omniquant_lwc_improves_block():
+    from repro.core import omniquant as OM
+    from repro.core.rtn import quantize_block_rtn
+    rng = np.random.default_rng(0)
+    d = 32
+    bp = {"wq": jnp.asarray(rng.normal(size=(d, d)), jnp.float32)}
+    X = rng.normal(size=(8, 6, d)).astype(np.float32)
+    X[:, :, :2] *= 10
+
+    def apply(b, x, aux):
+        return x @ b["wq"]
+
+    Y = np.einsum("nsd,df->nsf", X, np.asarray(bp["wq"]))
+    qcfg = QuantConfig(bits=2, group_size=16)
+    bp_rtn, _ = quantize_block_rtn(bp, qcfg)
+    e_rtn = np.mean((np.einsum("nsd,df->nsf", X,
+                               np.asarray(bp_rtn["wq"], np.float32)) - Y) ** 2)
+    bp_lwc, _ = OM.reconstruct_block(apply, bp, X, Y, None, qcfg,
+                                     steps=150, lr=5e-2, batch_size=4)
+    e_lwc = np.mean((np.einsum("nsd,df->nsf", X,
+                               np.asarray(bp_lwc["wq"], np.float32)) - Y) ** 2)
+    assert e_lwc < e_rtn

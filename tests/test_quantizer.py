@@ -1,0 +1,98 @@
+"""Unit + property tests for the uniform affine quantizer and bit-packing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import QuantConfig
+from repro.core import quantizer as Q
+from repro.core.qtensor import PACK_FACTOR, QTensor, pack, qmatmul, unpack
+
+
+@st.composite
+def codes_and_bits(draw):
+    bits = draw(st.sampled_from([2, 3, 4, 8]))
+    ppb = PACK_FACTOR[bits]
+    n = draw(st.integers(1, 8)) * ppb
+    m = draw(st.integers(1, 12))
+    vals = draw(st.lists(st.integers(0, (1 << bits) - 1),
+                         min_size=n * m, max_size=n * m))
+    return bits, np.array(vals, np.uint8).reshape(n, m)
+
+
+@settings(max_examples=40, deadline=None)
+@given(codes_and_bits())
+def test_pack_unpack_roundtrip(cb):
+    bits, codes = cb
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    out = np.asarray(unpack(packed, bits, codes.shape[0], axis=0))
+    np.testing.assert_array_equal(out, codes)
+    # container really is smaller (except 8-bit)
+    assert packed.shape[0] == codes.shape[0] // PACK_FACTOR[bits]
+
+
+@pytest.mark.parametrize("bits,group", [(2, 16), (3, 32), (4, None), (8, 8)])
+def test_fake_quantize_error_bound(bits, group):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    qcfg = QuantConfig(bits=bits, group_size=group)
+    fq = Q.fake_quantize(w, qcfg)
+    scale, _ = Q.compute_scale_zero(w, qcfg)
+    g = Q.resolve_group(64, group)
+    smax = np.asarray(scale).repeat(g, axis=0)
+    # RTN error is at most half a step everywhere (no clipping, gamma=1)
+    err = np.abs(np.asarray(fq - w))
+    assert (err <= smax * 0.5 + 1e-6).all()
+
+
+def test_codes_in_range():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(32, 8)) * 3, jnp.float32)
+    qcfg = QuantConfig(bits=2, group_size=16)
+    s, z = Q.compute_scale_zero(w, qcfg)
+    codes = Q.quantize_codes(w, s, z, qcfg)
+    c = np.asarray(codes)
+    assert c.min() >= 0 and c.max() <= 3
+
+
+def test_group_fallback_to_per_channel():
+    assert Q.resolve_group(48, 32) == 48       # non-divisible -> per-channel
+    assert Q.resolve_group(64, 32) == 32
+    assert Q.resolve_group(64, None) == 64
+
+
+def test_qtensor_matmul_matches_dense():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    qcfg = QuantConfig(bits=4, group_size=16)
+    from repro.core.quantizer import make_qtensor
+    qt = make_qtensor(w, qcfg)
+    fq = Q.fake_quantize(w, qcfg)
+    x = jnp.asarray(rng.normal(size=(5, 64)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(qmatmul(x, qt)),
+                               np.asarray(x @ fq), rtol=2e-2, atol=2e-2)
+
+
+def test_qtensor_act_scale_path():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    s_ch = jnp.asarray(rng.random(32) + 0.5, jnp.float32)
+    qcfg = QuantConfig(bits=8, group_size=None)
+    from repro.core.quantizer import make_qtensor
+    qt = make_qtensor(w * s_ch[:, None], qcfg, act_scale=s_ch)
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    # (x / s) @ Q(w * s) ~= x @ w at 8 bit
+    np.testing.assert_allclose(np.asarray(qmatmul(x, qt)),
+                               np.asarray(x @ w), rtol=0.05, atol=0.05)
+
+
+def test_memory_bytes_compression():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    from repro.core.quantizer import make_qtensor
+    qt2 = make_qtensor(w, QuantConfig(bits=2, group_size=128))
+    qt4 = make_qtensor(w, QuantConfig(bits=4, group_size=128))
+    fp16 = 256 * 128 * 2
+    assert qt2.memory_bytes() < fp16 / 6
+    assert qt4.memory_bytes() < fp16 / 3
+    assert qt2.memory_bytes() < qt4.memory_bytes()

@@ -1,0 +1,124 @@
+"""Sharding-rule unit tests (no multi-device requirement) + subprocess
+dry-runs on a small forced-device mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_dryrun(args, timeout=540):
+    env = dict(os.environ,
+               PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+# -- pure-logic tests -----------------------------------------------------
+
+def make_test_mesh():
+    # reuse the single real device: a (1,1) mesh exercises the code paths
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_resolve_spec_divisibility_fallback():
+    from repro.launch.sharding import resolve_spec
+    mesh = make_test_mesh()
+    spec = resolve_spec(mesh, ("batch", "tensor"), (8, 16))
+    # 1-sized axes shard trivially
+    assert len(spec) == 2
+
+
+def test_param_shardings_structure():
+    from repro.configs import get_reduced_config
+    from repro.launch.sharding import param_shardings
+    from repro.models import get_model
+    mesh = make_test_mesh()
+    for arch in ("tinyllama-1.1b", "qwen3-moe-30b-a3b", "rwkv6-3b",
+                 "zamba2-1.2b", "whisper-small"):
+        cfg = get_reduced_config(arch)
+        m = get_model(cfg)
+        ps = jax.eval_shape(m.init_params, jax.random.PRNGKey(0))
+        specs = param_shardings(mesh, ps, cfg)
+        # structurally identical trees
+        assert (jax.tree_util.tree_structure(ps)
+                == jax.tree_util.tree_structure(specs))
+
+
+def test_qtensor_sharding_specs():
+    from repro.configs import get_reduced_config
+    from repro.configs.base import QuantConfig
+    from repro.launch.sharding import param_shardings
+    from repro.launch.steps import quantize_param_struct
+    from repro.models import get_model
+    mesh = make_test_mesh()
+    cfg = get_reduced_config("tinyllama-1.1b")
+    m = get_model(cfg)
+    ps = jax.eval_shape(m.init_params, jax.random.PRNGKey(0))
+    qs = quantize_param_struct(ps, cfg, QuantConfig(bits=4, group_size=32))
+    specs = param_shardings(mesh, qs, cfg)
+    assert (jax.tree_util.tree_structure(qs)
+            == jax.tree_util.tree_structure(specs))
+
+
+def test_collective_parser():
+    from repro.launch.hlo_stats import collective_bytes
+    hlo = """
+      %ag = bf16[128,256]{1,0} all-gather(bf16[8,256]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+      %ar = f32[64]{0} all-reduce(f32[64]{0} %y), replica_groups=[4,2]<=[8]
+      %cp = f32[32]{0} collective-permute(f32[32]{0} %z), source_target_pairs={{0,1}}
+    """
+    out = collective_bytes(hlo, default_group=8)
+    assert out["n_ops"] == 3
+    ag = 128 * 256 * 2 * (15 / 16)
+    ar = 64 * 4 * 2 * (1 / 2)
+    cp = 32 * 4
+    assert out["per_kind"]["all-gather"] == pytest.approx(ag)
+    assert out["per_kind"]["all-reduce"] == pytest.approx(ar)
+    assert out["per_kind"]["collective-permute"] == pytest.approx(cp)
+
+
+# -- subprocess dry-runs on a forced 8-device host platform ---------------
+
+@pytest.mark.slow
+def test_dryrun_train_small_mesh(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun(["--arch", "smollm-135m", "--shape", "train_4k",
+                    "--mesh", "2,4", "--no-block-correction",
+                    "--out", str(out)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(out.read_text())
+    assert res["status"] == "ok"
+    assert res["roofline"]["flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_quantized_decode_small_mesh(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun(["--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+                    "--mesh", "2,4", "--quant", "W2A16g128",
+                    "--no-block-correction", "--out", str(out)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    res = json.loads(out.read_text())
+    assert res["status"] == "ok"
+    # packed weights must shrink the argument bytes vs fp16
+    assert res["memory"]["argument_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun(["--arch", "tinyllama-1.1b", "--shape", "long_500k",
+                    "--mesh", "2,4", "--out", str(out)])
+    assert r.returncode == 0
+    res = json.loads(out.read_text())
+    assert res["status"] == "skipped" and "attn" in res["why"]

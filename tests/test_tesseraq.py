@@ -1,0 +1,115 @@
+"""TesseraQ invariants: exact-init, hardening monotonicity, recon gains,
+DST range, merge/pack equivalence, flip statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import QuantConfig
+from repro.core import quantize_model, pack_model
+from repro.core import tesseraq as TQ
+from repro.core.rtn import rtn_leaf
+from repro.models import get_model
+
+QCFG = QuantConfig(bits=2, group_size=16)
+
+
+def leaf_state(seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    _, meta = rtn_leaf(w, QCFG)
+    return w, TQ._leaf_state(w, meta, QCFG)
+
+
+def test_soft_weight_reproduces_fp_at_init():
+    """nu0 = logit(theta/s - floor(theta/s))  =>  theta_hat == theta
+    (paper Sec 3.2), up to the clamp at the integer grid boundary."""
+    w, st = leaf_state()
+    w_hat = TQ.soft_weight(st, QCFG, dst=True)
+    # clamped range [0, qmax] can clip extreme values; interior must match
+    err = np.abs(np.asarray(w_hat) - np.asarray(w))
+    assert np.median(err) < 1e-4
+    assert np.quantile(err, 0.9) < np.asarray(st["scale"]).max()
+
+
+def test_harden_monotone_and_targets():
+    _, st = leaf_state()
+    states = {("w",): st}
+    total = st["nu"].size
+    for rate in (0.5, 0.2, 0.0):
+        states = TQ.harden(states, rate, use_inf=False)
+        soft = int((np.asarray(states[("w",)]["hard"]) == 0).sum())
+        assert soft <= int(total * rate) + 1
+    assert (np.asarray(states[("w",)]["hard"]) != 0).all()
+
+
+def test_harden_freezes_lowest_scores_first():
+    _, st = leaf_state(1)
+    hs = np.asarray(TQ.hardness_score(st["nu"]))
+    states = TQ.harden({("w",): st}, 0.5, use_inf=False)
+    frozen = np.asarray(states[("w",)]["hard"]) != 0
+    # every frozen score <= every surviving soft score
+    assert hs[frozen].max() <= hs[~frozen].min() + 1e-9
+
+
+def test_inf_freeze_equivalent():
+    _, st = leaf_state(2)
+    a = TQ.harden({("w",): dict(st)}, 0.3, use_inf=False)
+    b = TQ.harden({("w",): dict(st)}, 0.3, use_inf=True)
+    wa = TQ.soft_weight(a[("w",)], QCFG, dst=False)
+    wb = TQ.soft_weight(b[("w",)], QCFG, dst=False)
+    np.testing.assert_allclose(np.asarray(wa), np.asarray(wb),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def tiny_quantized():
+    cfg = get_reduced_config("llama2-7b").replace(num_layers=2)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                   (4, 24)))}]
+    qcfg = QuantConfig(bits=2, group_size=32)
+    tcfg = TQ.TesseraQConfig(par_iterations=3, steps_per_iteration=10,
+                             batch_size=4)
+    out = {}
+    for method in ("none", "tesseraq"):
+        pq, qmeta, rep = quantize_model(cfg, params, batches, qcfg,
+                                        method=method, init="awq", tcfg=tcfg)
+        out[method] = (pq, qmeta, rep)
+    return cfg, m, params, batches, qcfg, out
+
+
+def test_tesseraq_improves_reconstruction(tiny_quantized):
+    _, _, _, _, _, out = tiny_quantized
+    awq_err = np.mean([b["recon_mse"] for b in out["none"][2]["blocks"]])
+    tq_err = np.mean([b["recon_mse"] for b in out["tesseraq"][2]["blocks"]])
+    assert tq_err < awq_err
+
+
+def test_dst_factor_in_range(tiny_quantized):
+    _, _, _, _, _, out = tiny_quantized
+    qmeta = out["tesseraq"][1]
+    for meta in qmeta.values():
+        dst = np.asarray(meta["dst"])
+        assert (dst > 0).all() and (dst < 2).all()
+
+
+def test_pack_equals_fake_quant(tiny_quantized):
+    cfg, m, params, batches, qcfg, out = tiny_quantized
+    pq, qmeta, _ = out["tesseraq"]
+    packed = pack_model(cfg, pq, qmeta, qcfg)
+    l_fq = float(jax.jit(m.loss_fn)(pq, batches[0]))
+    l_pk = float(jax.jit(m.loss_fn)(packed, batches[0]))
+    assert abs(l_fq - l_pk) < 0.02
+
+
+def test_flip_stats(tiny_quantized):
+    cfg, m, params, batches, qcfg, out = tiny_quantized
+    stats = TQ.flip_stats(out["none"][1], out["tesseraq"][1])
+    assert stats, "no comparable leaves"
+    pcts = [s["pct"] for s in stats.values()]
+    # some rounding decisions flipped, but not a majority (paper Table 7)
+    assert 0.0 < np.mean(pcts) < 50.0
