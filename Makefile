@@ -1,0 +1,23 @@
+PY      ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-slow bench-smoke bench
+
+# tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
+test:
+	$(PY) -m pytest -q
+
+# everything, including @pytest.mark.slow integration/perf tests
+test-slow:
+	$(PY) -m pytest -q -m ""
+
+# executes the reconstruction-engine speed benchmark end-to-end with tiny
+# step counts — catches perf-path breakage on every CI run
+bench-smoke:
+	$(PY) -m benchmarks.recon_speed --dryrun
+
+# full benchmark suite (paper tables) + the recon engine speed report
+bench:
+	$(PY) -m benchmarks.recon_speed
+	$(PY) -m benchmarks.run

@@ -13,14 +13,28 @@ scale search — documented approximation).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import get_path, quant_leaf_paths
 from repro.models import layers as L
 
 MAX_ROWS = 1024          # token subsample kept per linear for objectives
+
+
+def stage_calibration(X, Y=None, aux=None) -> Tuple:
+    """Move a block's calibration streams to device *once*.
+
+    The reconstruction inner loop gathers minibatches out of these staged
+    arrays with a device-side ``take``; all host->device traffic for a block
+    happens here, before the first optimization step, instead of one transfer
+    per step.  Y is promoted to float32 (the reconstruction-loss dtype)."""
+    Xd = jnp.asarray(X)
+    Yd = jnp.asarray(Y, jnp.float32) if Y is not None else None
+    auxd = jnp.asarray(aux) if aux is not None else None
+    return Xd, Yd, auxd
 
 
 class LinearStats:

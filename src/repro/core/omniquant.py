@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs.base import QuantConfig
 from repro.core import quantizer as Q
+from repro.core import recon_engine as RE
 from repro.core.blocks import get_path, quant_leaf_paths, set_path
 from repro.optim.adam import AdamW
 
@@ -38,8 +39,20 @@ def _lwc_weight(w, g, b, qcfg: QuantConfig):
 
 def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
                       steps: int = 2000, lr: float = 1e-2, batch_size: int = 4,
-                      seed: int = 0, log: Optional[list] = None):
-    """LWC block reconstruction. Returns (bp_fq, qmeta)."""
+                      seed: int = 0, log: Optional[list] = None,
+                      engine: str = "device", cache: Optional[dict] = None):
+    """LWC block reconstruction. Returns (bp_fq, qmeta).
+
+    ``engine="device"`` runs the steps through the shared scanned
+    ``ReconstructionEngine`` (one dispatch per log interval; per-block data
+    travels through the engine's ``frozen`` argument, so a per-stage
+    ``cache`` compiles the loop once for all identically-shaped blocks);
+    ``engine="reference"`` keeps the legacy per-step host loop.  Device log
+    entries carry the loss of the LAST step in each chunk."""
+    if engine not in ("device", "reference", "legacy"):
+        raise ValueError(f"unknown engine {engine!r} (expected 'device', "
+                         "'reference' or 'legacy')")
+    # LWC has no fused-vs-eager split: "legacy" IS its reference host loop
     paths = quant_leaf_paths(bp)
     # init at sigmoid^-1(~1.0-) => gamma,beta start near 1 (4.0 -> 0.982)
     tr = {p: {"g": jnp.full(_scale_shape(get_path(bp, p), qcfg), 4.0),
@@ -47,28 +60,47 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
           for p in paths}
     ws = {p: jnp.asarray(get_path(bp, p), jnp.float32) for p in paths}
 
-    def loss_fn(tr, xb, yb, auxb):
-        b2 = bp
+    def loss_fn(tr, frozen, xb, yb, auxb):
+        b2 = frozen["bp"]
         for p in paths:
-            wq, _, _ = _lwc_weight(ws[p], tr[p]["g"], tr[p]["b"], qcfg)
-            b2 = set_path(b2, p, wq.astype(get_path(bp, p).dtype))
+            wq, _, _ = _lwc_weight(frozen["ws"][p], tr[p]["g"], tr[p]["b"],
+                                   qcfg)
+            b2 = set_path(b2, p, wq.astype(get_path(frozen["bp"], p).dtype))
         out = apply(b2, xb, auxb)
         return jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
 
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
     opt = AdamW(lr=lr)
-    st = opt.init(tr)
-    rng = np.random.default_rng(seed)
-    N = X.shape[0]
-    bs = min(batch_size, N)
-    for t in range(steps):
-        idx = rng.choice(N, bs, replace=False)
-        auxb = jnp.asarray(aux[idx]) if aux is not None else None
-        lv, grads = grad_fn(tr, jnp.asarray(X[idx]),
-                            jnp.asarray(Y[idx], jnp.float32), auxb)
-        tr, st = opt.update(grads, st, tr)
-        if log is not None and t % 100 == 0:
-            log.append({"step": t, "loss": float(lv)})
+    frozen = {"bp": bp, "ws": ws}
+    if engine == "device":
+        eng = cache.get("device") if cache is not None else None
+        if eng is None:
+            eng = RE.ReconstructionEngine(loss_fn, opt)
+            if cache is not None:
+                cache["device"] = eng
+        plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
+                             total_steps=steps, seed=seed)
+        st = eng.init(tr)
+        chunk = 100 if log is not None else steps
+        for t0 in range(0, steps, chunk):
+            n = min(chunk, steps - t0)
+            tr, st, lv = eng.run(tr, st, frozen, plan, start=t0, steps=n)
+            if log is not None:
+                log.append({"step": t0 + n - 1,
+                            "loss": float(RE.host_read(lv))})
+    else:
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        st = opt.init(tr)
+        rng = np.random.default_rng(seed)
+        N = X.shape[0]
+        bs = min(batch_size, N)
+        for t in range(steps):
+            idx = rng.choice(N, bs, replace=False)
+            auxb = jnp.asarray(aux[idx]) if aux is not None else None
+            lv, grads = grad_fn(tr, frozen, jnp.asarray(X[idx]),
+                                jnp.asarray(Y[idx], jnp.float32), auxb)
+            tr, st = opt.update(grads, st, tr)
+            if log is not None and t % 100 == 0:
+                log.append({"step": t, "loss": float(lv)})
 
     qmeta = {}
     for p in paths:

@@ -28,7 +28,7 @@ from repro.core import rtn as rtn_mod
 from repro.core import signround as sr_mod
 from repro.core import tesseraq as tq_mod
 from repro.core.blocks import build_stages, get_path, quant_leaf_paths, set_path
-from repro.core.capture import capture_block_inputs
+from repro.core.capture import capture_block_inputs, stage_calibration
 from repro.core.quantizer import resolve_group
 from repro.core.qtensor import QTensor, pack
 from repro.models.common import Ctx, DEFAULT_CTX
@@ -83,6 +83,9 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
             aux = np.concatenate([np.asarray(a) for a in aux_parts], 0)
 
         napply = jax.jit(stage.apply)
+        # the reconstruction inner loop compiles once per stage and is
+        # reused for every identically-shaped block in it
+        recon_cache: Dict = {}
 
         for i in range(stage.n_blocks):
             t0 = time.time()
@@ -114,20 +117,24 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
                     bp_init, qmeta = rtn_mod.quantize_block_rtn(bp_fp, qcfg)
 
                 log: list = []
+                # one host->device transfer per block: every engine gathers
+                # its minibatches out of these staged streams
+                Xd, Yd, auxd = stage_calibration(src, Y, aux)
                 if method == "tesseraq":
                     bp_q, qmeta = tq_mod.reconstruct_block(
-                        stage.apply, bp_fp, src, Y, aux, qmeta, qcfg, tcfg,
-                        log=log)
+                        stage.apply, bp_fp, Xd, Yd, auxd, qmeta, qcfg, tcfg,
+                        log=log, cache=recon_cache)
                 elif method == "omniquant":
                     bp_q, qmeta = omni_mod.reconstruct_block(
-                        stage.apply, bp_fp, src, Y, aux, qcfg,
-                        steps=omni_steps, log=log)
+                        stage.apply, bp_fp, Xd, Yd, auxd, qcfg,
+                        steps=omni_steps, log=log, engine=tcfg.engine,
+                        cache=recon_cache)
                 elif method == "signround":
                     bp_q, qmeta = sr_mod.reconstruct_block(
-                        stage.apply, bp_fp, src, Y, aux, qmeta, qcfg,
+                        stage.apply, bp_fp, Xd, Yd, auxd, qmeta, qcfg,
                         steps=max(tcfg.par_iterations
                                   * tcfg.steps_per_iteration, 50),
-                        log=log)
+                        log=log, engine=tcfg.engine, cache=recon_cache)
                 else:
                     bp_q = bp_init
 

@@ -1,0 +1,237 @@
+"""On-device block reconstruction engine shared by TesseraQ / OmniQuant /
+SignRound.
+
+The per-block inner loop is the cost center of every reconstruction-style PTQ
+method (paper Sec. 3.2/3.3, Algorithm 1): thousands of gradient steps per
+block, each tiny.  Run naively (one jitted grad call per step, batches
+gathered on the host, optimizer stepped eagerly) the wall clock is dominated
+by dispatch overhead and host<->device ping-pong, not math.  This module
+keeps the whole loop on the device:
+
+  * **Batch pre-staging** — the calibration streams X / Y / aux are moved to
+    the device once per block (``capture.stage_calibration``) and the entire
+    minibatch index plan for all K*T steps is drawn up front from
+    ``np.random.default_rng(seed)`` — the *same* generator and draw order as
+    the legacy host loop, so the two paths see identical batches.  Inside the
+    loop, minibatches are device-side ``take`` gathers.
+
+  * **Scanned soften phase** — the T Adam (or SignSGD) steps of one PAR
+    iteration run as a single ``jax.lax.scan``; trainables and optimizer
+    state are donated so backends that support aliasing update them in
+    place.  One dispatch per PAR iteration instead of T.
+
+  * **Jitted global-threshold hardening** — the block-wide HS quantile
+    (Algorithm 1's joint sort over every rounding variable in the block) is
+    computed with a device-side sort; frozen variables participate as +inf
+    sentinels, which pins the quantile to the fixed index ``want_soft`` of
+    the ascending sort and reproduces the NumPy reference's tie handling
+    exactly.
+
+  * **Host-sync accounting** — the only blocking device->host read per PAR
+    iteration is the optional log line, and it is routed through
+    ``host_read`` so tests and benchmarks can count syncs.
+
+The host-loop paths are kept alongside: ``TesseraQConfig.engine =
+"reference"`` (NumPy harden + fused jitted step — the oracle
+``tests/test_recon_engine.py`` pins bit-for-bit against the device engine)
+and ``engine = "legacy"`` (the original eager-optimizer loop, the
+``benchmarks/recon_speed.py`` baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.capture import stage_calibration
+
+# ---------------------------------------------------------------------------
+# host-sync accounting
+# ---------------------------------------------------------------------------
+
+_SYNC_COUNT = 0
+
+
+def host_read(x):
+    """Blocking device->host read, counted.  Every code path that pulls a
+    value out of the reconstruction loop goes through here so benchmarks can
+    assert the engine's <=1-sync-per-iteration guarantee."""
+    global _SYNC_COUNT
+    _SYNC_COUNT += 1
+    return np.asarray(x)
+
+
+def sync_count() -> int:
+    return _SYNC_COUNT
+
+
+def reset_sync_count() -> None:
+    global _SYNC_COUNT
+    _SYNC_COUNT = 0
+
+
+# ---------------------------------------------------------------------------
+# jitted global-threshold hardening
+# ---------------------------------------------------------------------------
+
+def _hardness_score(nu: jax.Array) -> jax.Array:
+    return jnp.abs(jax.nn.sigmoid(nu) - 0.5)          # HS (paper Eq. 6)
+
+
+@functools.partial(jax.jit, static_argnames=("use_inf",))
+def _harden_jit(states, want_soft, use_inf: bool):
+    """Freeze the HIGHEST-HS soft variables (those already nearly binary, so
+    rounding them perturbs the block least) until only ``want_soft``
+    variables remain soft across the WHOLE block (joint threshold over all
+    leaves).
+
+    Equivalence with the NumPy reference (``tesseraq.harden``): the reference
+    takes the k-th largest score *among currently-soft variables* (k =
+    n_soft_now - want_soft) and freezes every soft variable with
+    ``hs >= thresh``.  Mapping frozen slots to +inf and sorting the full
+    concatenated vector ascending puts the soft scores at positions
+    [0, n_soft_now), so that same threshold lives at index ``want_soft`` —
+    no host round-trip to count how many are already frozen.  When nothing
+    needs freezing (n_soft_now <= want_soft) that index lands on a +inf
+    sentinel and the ``hs >= thresh`` mask is empty, reproducing the
+    reference's early return."""
+    scores = jnp.concatenate([
+        jnp.where(st["hard"] == 0, _hardness_score(st["nu"]),
+                  jnp.inf).ravel()
+        for st in states.values()])
+    thresh = jnp.take(jnp.sort(scores), want_soft)
+
+    new = {}
+    for p, st in states.items():
+        hs = _hardness_score(st["nu"])
+        freeze = (st["hard"] == 0) & (hs >= thresh)
+        sign = jnp.where(st["nu"] > 0, 1, -1).astype(jnp.int8)
+        hard = jnp.where(freeze, sign, st["hard"])
+        st = dict(st)
+        st["hard"] = hard
+        if use_inf:
+            st["nu"] = jnp.where(hard != 0, hard.astype(jnp.float32) * 40.0,
+                                 st["nu"])
+        new[p] = st
+    return new
+
+
+def harden_device(states, target_soft_rate: float, use_inf: bool):
+    """Device-side counterpart of ``tesseraq.harden`` (same freeze sets,
+    including ties — verified bit-for-bit by tests/test_recon_engine.py)."""
+    total = sum(int(np.prod(st["hard"].shape)) for st in states.values())
+    want_soft = int(total * target_soft_rate)
+    if want_soft >= total:
+        return states                                  # nothing to freeze
+    return _harden_jit(states, jnp.asarray(want_soft, jnp.int32), use_inf)
+
+
+# ---------------------------------------------------------------------------
+# optimizers beyond AdamW (duck-typed: .init(params), .update(g, st, p))
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SignSGD:
+    """Signed gradient descent with linear lr decay (SignRound's optimizer).
+    State is just the global step counter."""
+    lr: float = 5e-3
+    total_steps: int = 200
+    clip: float = 0.5
+
+    def init(self, params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(self, grads, state, params):
+        frac = state.astype(jnp.float32) / max(self.total_steps, 1)
+        cur_lr = self.lr * (1.0 - frac)
+        new = jax.tree_util.tree_map(
+            lambda p, g: jnp.clip(p - cur_lr * jnp.sign(g),
+                                  -self.clip, self.clip),
+            params, grads)
+        return new, state + 1
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchPlan:
+    """Per-block staged calibration data + the full minibatch index plan.
+
+    The plan is drawn once from ``np.random.default_rng(seed)`` — identical
+    draws, in the same order, as a host loop calling ``rng.choice(N, bs,
+    replace=False)`` once per step, which is what pins the device engine to
+    the reference path batch-for-batch."""
+    X: Any
+    Y: Any
+    aux: Any
+    index_plan: Any        # (total_steps, bs) int32, on device
+    total_steps: int
+
+
+def stage_plan(X, Y, aux=None, *, batch_size: int, total_steps: int,
+               seed: int = 0) -> BatchPlan:
+    Xd, Yd, auxd = stage_calibration(X, Y, aux)
+    N = Xd.shape[0]
+    bs = min(batch_size, N)
+    rng = np.random.default_rng(seed)
+    plan = np.stack([rng.choice(N, bs, replace=False)
+                     for _ in range(total_steps)])
+    return BatchPlan(Xd, Yd, auxd, jnp.asarray(plan, jnp.int32), total_steps)
+
+
+class ReconstructionEngine:
+    """Scanned, donated inner loop over a pre-staged :class:`BatchPlan`.
+
+    ``loss_fn(trainables, frozen, xb, yb, auxb) -> scalar`` is the block
+    reconstruction objective; ``frozen`` is an arbitrary pytree of
+    non-trainable side state (e.g. TesseraQ's hardened masks AND the block
+    params themselves) threaded through unchanged.  ``optimizer`` is AdamW /
+    SignSGD / anything with the same ``init`` / ``update`` protocol.
+
+    The engine is data-free: everything per-block (weights, calibration
+    streams, index plan) enters ``run`` as arguments, so ONE engine — and
+    one XLA compilation of its scanned step — is reused for every
+    identically-shaped block in a stage.  Callers hold the engine in a
+    per-stage cache; compilation amortizes over the model's depth.
+    """
+
+    def __init__(self, loss_fn: Callable, optimizer, *, donate: bool = True):
+        self.opt = optimizer
+        grad_fn = jax.value_and_grad(loss_fn)
+        opt = optimizer
+
+        def run(tr, opt_state, frozen, X, Y, aux, idx):
+            def step(carry, i):
+                tr, opt_state = carry
+                xb = jnp.take(X, i, axis=0)
+                yb = jnp.take(Y, i, axis=0)
+                auxb = jnp.take(aux, i, axis=0) if aux is not None else None
+                lv, grads = grad_fn(tr, frozen, xb, yb, auxb)
+                tr, opt_state = opt.update(grads, opt_state, tr)
+                return (tr, opt_state), lv
+            (tr, opt_state), losses = jax.lax.scan(step, (tr, opt_state), idx)
+            return tr, opt_state, losses[-1]
+
+        # trainables + optimizer state are loop carries: donate them so the
+        # update happens in place where the backend supports aliasing
+        self._run = jax.jit(run, donate_argnums=(0, 1) if donate else ())
+
+    def init(self, trainables):
+        return self.opt.init(trainables)
+
+    def run(self, trainables, opt_state, frozen, plan: BatchPlan, *,
+            start: int = 0, steps: Optional[int] = None):
+        """Execute ``steps`` optimization steps (plan rows [start,
+        start+steps)) in one dispatch.  Returns (trainables, opt_state,
+        last_loss) with the loss still on device — reading it is the
+        caller's (counted) choice."""
+        steps = plan.total_steps - start if steps is None else steps
+        idx = plan.index_plan[start:start + steps]
+        return self._run(trainables, opt_state, frozen,
+                         plan.X, plan.Y, plan.aux, idx)

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs.base import QuantConfig
 from repro.core import quantizer as Q
+from repro.core import recon_engine as RE
 from repro.core.blocks import get_path, quant_leaf_paths, set_path
 
 
@@ -45,9 +46,21 @@ def _sr_weight(w, v, scale, zero, qcfg: QuantConfig, act_scale=None):
 def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
                       qcfg: QuantConfig, *, steps: int = 200, lr: float = 5e-3,
                       batch_size: int = 4, seed: int = 0,
-                      log: Optional[list] = None):
+                      log: Optional[list] = None, engine: str = "device",
+                      cache: Optional[dict] = None):
     """Sign-SGD rounding optimization on one block.  qmeta supplies the
-    (AWQ/RTN) scale/zero/act_scale init, exactly as for TesseraQ."""
+    (AWQ/RTN) scale/zero/act_scale init, exactly as for TesseraQ.
+
+    ``engine="device"`` scans the sign-SGD steps on device through the shared
+    ``ReconstructionEngine`` (with ``SignSGD`` as the optimizer; per-block
+    data travels through ``frozen``, so a per-stage ``cache`` compiles once
+    for all identically-shaped blocks); ``engine="reference"`` keeps the
+    legacy per-step host loop.  Device log entries carry the loss of the
+    LAST step in each chunk."""
+    if engine not in ("device", "reference", "legacy"):
+        raise ValueError(f"unknown engine {engine!r} (expected 'device', "
+                         "'reference' or 'legacy')")
+    # sign-SGD has no fused-vs-eager split: "legacy" IS its reference loop
     paths = quant_leaf_paths(bp)
     fixed = {p: {"scale": qmeta[p]["scale"], "zero": qmeta[p]["zero"],
                  "act_scale": qmeta[p].get("act_scale")} for p in paths}
@@ -58,7 +71,7 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
         vs[p] = jnp.zeros(w.shape[:-2] + (w.shape[-2] // g, g, w.shape[-1]),
                           jnp.float32)
 
-    def substitute(vs):
+    def substitute(bp, fixed, vs):
         b2 = bp
         for p in paths:
             w = get_path(bp, p)
@@ -67,24 +80,43 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
             b2 = set_path(b2, p, wq.astype(w.dtype))
         return b2
 
-    def loss_fn(vs, xb, yb, auxb):
-        out = apply(substitute(vs), xb, auxb)
+    def loss_fn(vs, frozen, xb, yb, auxb):
+        out = apply(substitute(frozen["bp"], frozen["fixed"], vs), xb, auxb)
         return jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
 
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
-    rng = np.random.default_rng(seed)
-    N = X.shape[0]
-    bs = min(batch_size, N)
-    for t in range(steps):
-        idx = rng.choice(N, bs, replace=False)
-        auxb = jnp.asarray(aux[idx]) if aux is not None else None
-        lv, grads = grad_fn(vs, jnp.asarray(X[idx]),
-                            jnp.asarray(Y[idx], jnp.float32), auxb)
-        cur_lr = lr * (1.0 - t / steps)               # linear decay
-        vs = {p: jnp.clip(vs[p] - cur_lr * jnp.sign(grads[p]), -0.5, 0.5)
-              for p in paths}
-        if log is not None and t % 50 == 0:
-            log.append({"step": t, "loss": float(lv)})
+    frozen = {"bp": bp, "fixed": fixed}
+    if engine == "device":
+        eng = cache.get("device") if cache is not None else None
+        if eng is None:
+            eng = RE.ReconstructionEngine(
+                loss_fn, RE.SignSGD(lr=lr, total_steps=steps, clip=0.5))
+            if cache is not None:
+                cache["device"] = eng
+        plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
+                             total_steps=steps, seed=seed)
+        st = eng.init(vs)
+        chunk = 50 if log is not None else steps
+        for t0 in range(0, steps, chunk):
+            n = min(chunk, steps - t0)
+            vs, st, lv = eng.run(vs, st, frozen, plan, start=t0, steps=n)
+            if log is not None:
+                log.append({"step": t0 + n - 1,
+                            "loss": float(RE.host_read(lv))})
+    else:
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        rng = np.random.default_rng(seed)
+        N = X.shape[0]
+        bs = min(batch_size, N)
+        for t in range(steps):
+            idx = rng.choice(N, bs, replace=False)
+            auxb = jnp.asarray(aux[idx]) if aux is not None else None
+            lv, grads = grad_fn(vs, frozen, jnp.asarray(X[idx]),
+                                jnp.asarray(Y[idx], jnp.float32), auxb)
+            cur_lr = lr * (1.0 - t / steps)               # linear decay
+            vs = {p: jnp.clip(vs[p] - cur_lr * jnp.sign(grads[p]), -0.5, 0.5)
+                  for p in paths}
+            if log is not None and t % 50 == 0:
+                log.append({"step": t, "loss": float(lv)})
 
     new_meta = {}
     for p in paths:

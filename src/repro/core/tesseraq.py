@@ -7,14 +7,34 @@ Per block:
         nu0 = logit(theta/s - floor(theta/s))
   * DST variables  v  (one per quant group), dequant factor 2*sigmoid(v),
     initialized to 1 (v = 0)
-  * K PAR iterations; iteration k HARDENS the P_k% of still-soft variables
-    with the lowest hardness score  HS(nu) = |sigmoid(nu) - 0.5|  (they are
-    frozen to their binary value), then SOFTENS: T Adam steps on the
-    surviving nu and all v against  || block(theta_hat, X) - block(theta, X) ||_F^2.
+  * K PAR iterations; iteration k HARDENS the still-soft variables with the
+    HIGHEST hardness score  HS(nu) = |sigmoid(nu) - 0.5|  — the ones already
+    closest to a binary decision, so rounding them perturbs the block least —
+    (they are frozen to their binary value), then SOFTENS: T Adam steps on
+    the surviving nu and all v against
+    || block(theta_hat, X) - block(theta, X) ||_F^2.
 
 Hardening is tracked with an explicit sign tensor (exactly-zero gradients for
 frozen variables); the paper's memory-light alternative (set nu to +-inf) is
 available via ``use_inf_freeze``.
+
+Two interchangeable inner-loop engines (``TesseraQConfig.engine``):
+
+  * ``"device"`` (default) — the scanned on-device engine from
+    ``core/recon_engine.py``: jitted global-threshold hardening, T Adam steps
+    per ``lax.scan`` dispatch with donated buffers, batches gathered on
+    device from a pre-staged index plan.  At most one host sync per PAR
+    iteration (the optional log line).
+  * ``"reference"`` — the host-loop oracle: NumPy hardening, Python-looped
+    steps with per-step host batch gather, but the (grad + Adam) step body
+    fused into one jitted function — the exact HLO the device engine scans
+    over, so ``tests/test_recon_engine.py`` pins the two bit-for-bit.
+  * ``"legacy"`` — the original pre-engine path: jitted gradient only, the
+    Adam update dispatched EAGERLY per tree leaf.  Kept as the benchmark
+    baseline (``benchmarks/recon_speed.py``); its eager optimizer arithmetic
+    differs from the fused step by ~1 ulp, so it tracks the other two only
+    up to float32 rounding (codes match, folded scales drift in the last
+    bit).
 """
 from __future__ import annotations
 
@@ -27,6 +47,7 @@ import numpy as np
 
 from repro.configs.base import QuantConfig
 from repro.core import quantizer as Q
+from repro.core import recon_engine as RE
 from repro.core.blocks import get_path, quant_leaf_paths, set_path
 from repro.optim.adam import AdamW
 
@@ -56,6 +77,11 @@ class TesseraQConfig:
     par: bool = True                      # progressive adaptive rounding
     use_inf_freeze: bool = False          # paper's memory-light hardening
     seed: int = 0
+    engine: str = "device"                # "device" | "reference" | "legacy"
+    # keep Adam moments across PAR iterations (both engines honor this; the
+    # surviving soft variables continue from warm state instead of cold
+    # restarts after every harden)
+    carry_opt_state: bool = True
 
 
 def _leaf_state(w, meta, qcfg: QuantConfig):
@@ -108,15 +134,17 @@ def hardness_score(nu: jax.Array) -> jax.Array:
 
 
 def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
-    """Freeze the lowest-HS soft variables so that only ``target_soft_rate``
-    of ALL rounding variables in the block remain soft.  The threshold is
-    global across the block's leaves (joint sort, as in Algorithm 1)."""
-    scores, softs = [], []
+    """NumPy reference hardening: freeze the HIGHEST-HS soft variables (those
+    already nearly binary — rounding them perturbs the block least) so that
+    only ``target_soft_rate`` of ALL rounding variables in the block remain
+    soft.  The threshold is global across the block's leaves (joint sort, as
+    in Algorithm 1).  The jitted equivalent is
+    ``recon_engine.harden_device``."""
+    scores = []
     for st in states.values():
         s = np.asarray(hardness_score(st["nu"])).ravel()
         m = np.asarray(st["hard"]).ravel() == 0
         scores.append(s[m])
-        softs.append(m)
     all_scores = np.concatenate(scores) if scores else np.zeros(0)
     total = sum(int(np.asarray(st["hard"]).size) for st in states.values())
     want_soft = int(total * target_soft_rate)
@@ -124,15 +152,16 @@ def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
     n_to_freeze = max(0, n_soft_now - want_soft)
     if n_to_freeze == 0:
         return states
-    thresh = np.partition(all_scores, n_to_freeze - 1)[n_to_freeze - 1] \
-        if n_to_freeze < n_soft_now else np.inf
+    # k-th largest soft score == ascending-partition index want_soft
+    thresh = np.partition(all_scores, want_soft)[want_soft] \
+        if n_to_freeze < n_soft_now else -np.inf
 
     new = {}
     for p, st in states.items():
         nu = np.asarray(st["nu"])
         hard = np.asarray(st["hard"]).copy()
         hs = np.asarray(hardness_score(st["nu"]))
-        freeze = (hard == 0) & (hs <= thresh)
+        freeze = (hard == 0) & (hs >= thresh)
         sign = np.where(nu > 0, 1, -1).astype(np.int8)
         hard = np.where(freeze, sign, hard)
         st = dict(st)
@@ -151,47 +180,96 @@ def substitute(bp, states, qcfg: QuantConfig, dst: bool):
     return bp
 
 
-def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
-                      aux, qmeta: Dict, qcfg: QuantConfig,
-                      tcfg: TesseraQConfig, log: Optional[list] = None):
-    """Run TesseraQ on one block.
+# ---------------------------------------------------------------------------
+# shared inner-loop plumbing (both engines)
+# ---------------------------------------------------------------------------
 
-    X: (N, S, d) inputs; Y: (N, S, d) FP outputs; aux: per-sample extra
-    stream or None.  Returns (bp_fq, qmeta') with DST folded into qmeta.
-    """
-    paths = quant_leaf_paths(bp)
-    states = {p: _leaf_state(get_path(bp, p), qmeta[p], qcfg) for p in paths}
+def _trainables(states, dst: bool):
+    t = {p: {"nu": st["nu"]} for p, st in states.items()}
+    if dst:
+        for p, tp in t.items():
+            tp["v"] = states[p]["v"]
+    return t
 
-    opt = AdamW(lr=tcfg.lr)
 
-    def trainables(states):
-        t = {p: {"nu": st["nu"]} for p, st in states.items()}
-        if tcfg.dst:
-            for p in paths:
-                t[p]["v"] = states[p]["v"]
-        return t
+def _merge(states, tr, dst: bool):
+    out = {}
+    for p, st in states.items():
+        st = dict(st)
+        st["nu"] = tr[p]["nu"]
+        if dst:
+            st["v"] = tr[p]["v"]
+        out[p] = st
+    return out
 
-    def merge(states, tr):
-        out = {}
-        for p, st in states.items():
-            st = dict(st)
-            st["nu"] = tr[p]["nu"]
-            if tcfg.dst:
-                st["v"] = tr[p]["v"]
-            out[p] = st
-        return out
 
+def _make_loss_fn(apply: Callable, qcfg: QuantConfig, tcfg: TesseraQConfig):
+    """loss(tr, frozen, xb, yb, auxb) with ``frozen = {"bp": block_params,
+    "sts": states}`` — block params ride in the frozen pytree (not a trace
+    closure) so ONE compiled loss serves every identically-shaped block.
+    ``sts`` may be the full states or states with the trainable entries
+    stripped — tr keys win on merge."""
     def loss_fn(tr, frozen, xb, yb, auxb):
-        sts = merge(frozen, tr)
-        bq = substitute(bp, sts, qcfg, tcfg.dst)
+        sts = {p: {**frozen["sts"][p], **tr[p]} for p in frozen["sts"]}
+        bq = substitute(frozen["bp"], sts, qcfg, tcfg.dst)
         out = apply(bq, xb, auxb)
         loss = jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
         if tcfg.dst and tcfg.v_weight_decay:
             loss = loss + tcfg.v_weight_decay * sum(
                 jnp.sum(jnp.square(t["v"])) for t in tr.values())
         return loss
+    return loss_fn
 
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+def _schedule_index(k: int, K: int, n_rates: int) -> int:
+    """Stretch the soft-rate schedule over K iterations anchored at BOTH
+    ends: the first harden freezes only 1-sr[0] (~10%, paper's gentle start)
+    and the last always reaches the schedule's final rate (0.0 soft)."""
+    return (int(round(k * (n_rates - 1) / max(K - 1, 1)))
+            if K > 1 else n_rates - 1)
+
+
+@jax.jit
+def _log_stats(lv, states):
+    """Fused per-iteration log payload: [last loss, global soft rate] in a
+    single device array so the host pulls it with ONE blocking read."""
+    soft = sum(jnp.sum((st["hard"] == 0).astype(jnp.float32))
+               for st in states.values())
+    total = sum(int(np.prod(st["hard"].shape)) for st in states.values())
+    return jnp.stack([lv, soft / max(total, 1)])
+
+
+def _soft_rate_of(states) -> float:
+    """Global fraction of rounding variables still soft (element-weighted
+    across leaves — the quantity the PAR schedule targets)."""
+    soft = sum(int((np.asarray(st["hard"]) == 0).sum())
+               for st in states.values())
+    total = sum(int(np.asarray(st["hard"]).size) for st in states.values())
+    return soft / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# engines
+# ---------------------------------------------------------------------------
+
+def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
+                   log: Optional[list], cache: Optional[dict] = None):
+    """Legacy host loop: NumPy harden, per-step host batch gather, one
+    dispatch per step.  The (grad + Adam) step body is a single jitted
+    function — the same HLO the device engine scans over."""
+    opt = AdamW(lr=tcfg.lr)
+    step_fn = cache.get("reference") if cache is not None else None
+    if step_fn is None:
+        grad_fn = jax.value_and_grad(_make_loss_fn(apply, qcfg, tcfg))
+
+        @jax.jit
+        def step_fn(tr, opt_state, frozen, xb, yb, auxb):
+            lv, grads = grad_fn(tr, frozen, xb, yb, auxb)
+            tr, opt_state = opt.update(grads, opt_state, tr)
+            return tr, opt_state, lv
+
+        if cache is not None:
+            cache["reference"] = step_fn
 
     N = X.shape[0]
     bs = min(tcfg.batch_size, N)
@@ -202,27 +280,145 @@ def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
     opt_state = None
     for k in range(K):
         if tcfg.par:
-            # stretch the schedule over K iterations anchored at BOTH ends:
-            # the first harden freezes only 1-sr[0] (~10%, paper's gentle
-            # start) and the last always reaches 0.0 soft
-            idx = (int(round(k * (len(sr) - 1) / max(K - 1, 1)))
-                   if K > 1 else len(sr) - 1)
-            states = harden(states, sr[idx], tcfg.use_inf_freeze)
-        tr = trainables(states)
-        opt_state = opt.init(tr)
-        for t in range(tcfg.steps_per_iteration):
+            states = harden(states, sr[_schedule_index(k, K, len(sr))],
+                            tcfg.use_inf_freeze)
+        tr = _trainables(states, tcfg.dst)
+        if opt_state is None or not tcfg.carry_opt_state:
+            opt_state = opt.init(tr)
+        lv = None
+        for _ in range(tcfg.steps_per_iteration):
             idx = rng.choice(N, bs, replace=False)
             xb = jnp.asarray(X[idx])
             yb = jnp.asarray(Y[idx], jnp.float32)
             auxb = jnp.asarray(aux[idx]) if aux is not None else None
-            lv, grads = grad_fn(tr, states, xb, yb, auxb)
-            tr, opt_state = opt.update(grads, opt_state, tr)
-        states = merge(states, tr)
+            tr, opt_state, lv = step_fn(tr, opt_state,
+                                        {"bp": bp, "sts": states},
+                                        xb, yb, auxb)
+        states = _merge(states, tr, tcfg.dst)
         if log is not None:
-            log.append({"iter": k, "loss": float(lv),
-                        "soft_rate": float(np.mean([
-                            (np.asarray(st["hard"]) == 0).mean()
-                            for st in states.values()]))})
+            log.append({"iter": k, "loss": float(RE.host_read(lv)),
+                        "soft_rate": _soft_rate_of(states)})
+    return states
+
+
+def _run_legacy(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
+                log: Optional[list], cache: Optional[dict] = None):
+    """The original (pre-engine) loop, kept as the speed baseline: jitted
+    gradient, EAGER per-leaf Adam update (one XLA dispatch per tree-map op),
+    per-step host batch gather, NumPy harden."""
+    opt = AdamW(lr=tcfg.lr)
+    grad_fn = cache.get("legacy") if cache is not None else None
+    if grad_fn is None:
+        grad_fn = jax.jit(jax.value_and_grad(_make_loss_fn(apply, qcfg,
+                                                           tcfg)))
+        if cache is not None:
+            cache["legacy"] = grad_fn
+
+    N = X.shape[0]
+    bs = min(tcfg.batch_size, N)
+    rng = np.random.default_rng(tcfg.seed)
+
+    K = tcfg.par_iterations if tcfg.par else 1
+    sr = list(tcfg.soft_rate)
+    opt_state = None
+    for k in range(K):
+        if tcfg.par:
+            states = harden(states, sr[_schedule_index(k, K, len(sr))],
+                            tcfg.use_inf_freeze)
+        tr = _trainables(states, tcfg.dst)
+        if opt_state is None or not tcfg.carry_opt_state:
+            opt_state = opt.init(tr)
+        lv = None
+        for _ in range(tcfg.steps_per_iteration):
+            idx = rng.choice(N, bs, replace=False)
+            lv, grads = grad_fn(tr, {"bp": bp, "sts": states},
+                                jnp.asarray(X[idx]),
+                                jnp.asarray(Y[idx], jnp.float32),
+                                jnp.asarray(aux[idx])
+                                if aux is not None else None)
+            tr, opt_state = opt.update(grads, opt_state, tr)
+        states = _merge(states, tr, tcfg.dst)
+        if log is not None:
+            log.append({"iter": k, "loss": float(RE.host_read(lv)),
+                        "soft_rate": _soft_rate_of(states)})
+    return states
+
+
+def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
+                log: Optional[list], cache: Optional[dict] = None):
+    """On-device engine: jitted hardening, scanned soften phase, pre-staged
+    batches.  The only blocking host read per PAR iteration is the optional
+    log line (loss + realized soft rate fused into one transfer).
+
+    Block params travel inside the engine's ``frozen`` argument, so with a
+    per-stage ``cache`` the scanned step compiles ONCE and is reused for
+    every identically-shaped block."""
+    K = tcfg.par_iterations if tcfg.par else 1
+    T = tcfg.steps_per_iteration
+    eng = cache.get("device") if cache is not None else None
+    if eng is None:
+        eng = RE.ReconstructionEngine(_make_loss_fn(apply, qcfg, tcfg),
+                                      AdamW(lr=tcfg.lr))
+        if cache is not None:
+            cache["device"] = eng
+    plan = RE.stage_plan(X, Y, aux, batch_size=tcfg.batch_size,
+                         total_steps=K * T, seed=tcfg.seed)
+
+    trainable_keys = ("nu", "v") if tcfg.dst else ("nu",)
+
+    sr = list(tcfg.soft_rate)
+    opt_state = None
+    for k in range(K):
+        if tcfg.par:
+            states = RE.harden_device(
+                states, sr[_schedule_index(k, K, len(sr))],
+                tcfg.use_inf_freeze)
+        tr = _trainables(states, tcfg.dst)
+        # strip trainable entries from the side state: tr owns those buffers
+        # (and donates them), frozen carries everything else
+        frozen = {p: {kk: vv for kk, vv in st.items()
+                      if kk not in trainable_keys}
+                  for p, st in states.items()}
+        if opt_state is None or not tcfg.carry_opt_state:
+            opt_state = eng.init(tr)
+        tr, opt_state, lv = eng.run(tr, opt_state, {"bp": bp, "sts": frozen},
+                                    plan, start=k * T, steps=T)
+        states = _merge(states, tr, tcfg.dst)
+        if log is not None:
+            stats = RE.host_read(_log_stats(lv, states))
+            log.append({"iter": k, "loss": float(stats[0]),
+                        "soft_rate": float(stats[1])})
+    return states
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
+                      aux, qmeta: Dict, qcfg: QuantConfig,
+                      tcfg: TesseraQConfig, log: Optional[list] = None,
+                      cache: Optional[dict] = None):
+    """Run TesseraQ on one block.
+
+    X: (N, S, d) inputs; Y: (N, S, d) FP outputs; aux: per-sample extra
+    stream or None.  Returns (bp_fq, qmeta') with DST folded into qmeta.
+    The inner loop runs on the engine selected by ``tcfg.engine``.
+
+    ``cache`` (a plain dict the caller scopes to one stage — constant
+    ``apply``/shapes/qcfg/tcfg) reuses the compiled inner loop across the
+    stage's blocks instead of recompiling per block.
+    """
+    paths = quant_leaf_paths(bp)
+    states = {p: _leaf_state(get_path(bp, p), qmeta[p], qcfg) for p in paths}
+
+    runners = {"device": _run_device, "reference": _run_reference,
+               "legacy": _run_legacy}
+    if tcfg.engine not in runners:
+        raise ValueError(f"unknown engine {tcfg.engine!r} "
+                         f"(expected one of {sorted(runners)})")
+    states = runners[tcfg.engine](apply, bp, X, Y, aux, qcfg, tcfg, states,
+                                  log, cache)
 
     # ---- post-processing: hard-round everything, fold DST into the scale ---
     new_meta = {}

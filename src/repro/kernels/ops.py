@@ -7,6 +7,7 @@ core/qtensor.qmatmul is the default on CPU)."""
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -42,7 +43,12 @@ def quant_matmul_op(x, packed, scale, zero, *, bits: int, group_size: int,
     bm = min(block_m, max(8, M))
     bn = min(block_n, N)
     bk = min(block_k, K)
-    bk = max(group_size, (bk // group_size) * group_size)
+    if bk % group_size and group_size % bk:
+        # snap bk so the kernel's group-alignment contract holds: down to a
+        # whole number of groups when groups are smaller than the tile,
+        # otherwise to a divisor of the (larger) group
+        bk = ((bk // group_size) * group_size if bk > group_size
+              else math.gcd(bk, group_size))
     xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
     out = quant_matmul(xp, _pad_to(packed, bn, 1),
                        _pad_to(scale, bn, 1), _pad_to(zero, bn, 1),

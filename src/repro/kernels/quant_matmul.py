@@ -26,6 +26,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.qtensor import PACK_FACTOR
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _unpack_tile(p, ppb: int, fbits: int):
     """(bk//ppb, bn) uint8 -> (bk, bn) uint8 codes, matching qtensor.pack."""
@@ -73,8 +77,20 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
     N = packed.shape[1]
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    assert bk % group_size == 0, (bk, group_size)
-    gpt = bk // group_size
+    if bk % group_size == 0:
+        # small groups: >=1 whole group per K tile, scale rows advance with k
+        gpt = bk // group_size
+        sz_index = lambda i, j, k: (k, j)
+    elif group_size % bk == 0:
+        # large groups spanning several K tiles: each tile sits inside ONE
+        # group, so a single scale/zero row is fetched and the row index
+        # advances once every (group_size // bk) K steps
+        gpt = 1
+        tiles_per_group = group_size // bk
+        sz_index = lambda i, j, k: (k // tiles_per_group, j)
+    else:
+        raise ValueError(f"bk={bk} and group_size={group_size} must divide "
+                         "one another")
     nk = K // bk
 
     grid = (M // bm, N // bn, nk)
@@ -86,13 +102,13 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk // ppb, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((gpt, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((gpt, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gpt, bn), sz_index),
+            pl.BlockSpec((gpt, bn), sz_index),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, packed, scale, zero)

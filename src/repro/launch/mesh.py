@@ -9,6 +9,16 @@ from __future__ import annotations
 import jax
 
 
+def _mk(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer jax."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single v5e pod (256 chips) or 2x16x16 (2 pods, 512 chips).
 
@@ -16,8 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     crosses the DCN between pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes=None):
@@ -25,8 +34,7 @@ def make_mesh(shape, axes=None):
     if axes is None:
         axes = ("pod", "data", "model")[-len(shape):] if len(shape) == 3 \
             else ("data", "model")[:len(shape)]
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(tuple(shape), tuple(axes))
 
 
 def dp_axes(mesh) -> tuple:

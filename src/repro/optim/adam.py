@@ -29,10 +29,29 @@ class AdamW:
     state_dtype: Any = jnp.float32
 
     def init(self, params) -> AdamState:
+        """Zero state.  ``params`` may be real arrays *or* a template tree of
+        ``jax.ShapeDtypeStruct`` — only ``.shape`` is read, so state can be
+        allocated straight into donated buffers without materializing a
+        throwaway copy of the trainables."""
         z = lambda p: jnp.zeros(p.shape, self.state_dtype)
         return AdamState(jnp.zeros((), jnp.int32),
                          jax.tree_util.tree_map(z, params),
                          jax.tree_util.tree_map(z, params))
+
+    def init_abstract(self, params) -> AdamState:
+        """ShapeDtypeStruct skeleton of ``init`` (AOT donation planning)."""
+        return jax.eval_shape(self.init, params)
+
+    def jitted_update(self, donate: bool = True):
+        """``update`` compiled standalone.  With ``donate=True`` the grads,
+        optimizer state and params buffers are donated — the optimizer
+        consumes all three, so in-place reuse is free on backends that
+        support aliasing.  Donation is skipped on CPU, where XLA cannot
+        alias these buffers and would only emit unusable-donation
+        warnings."""
+        donate = donate and jax.default_backend() != "cpu"
+        return jax.jit(self.update,
+                       donate_argnums=(0, 1, 2) if donate else ())
 
     def _lr(self, step):
         return self.lr(step) if callable(self.lr) else self.lr

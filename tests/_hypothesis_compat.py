@@ -1,0 +1,54 @@
+"""Hypothesis-optional shim for property-based tests.
+
+Test modules import the property-testing surface from here instead of from
+``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed this is a pure re-export.  Without it, strategy
+construction becomes inert (any ``st.*`` expression evaluates to a chainable
+dummy, so module-level ``@st.composite`` definitions and ``@given(...)``
+decorator arguments still evaluate) and every ``@given`` test collapses to a
+zero-argument test that skips at runtime — the parametrized/unit cases in
+the same module keep collecting and running.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategy:
+        """Stand-in for any strategy object or combinator: every attribute,
+        call, or chain returns another inert strategy."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _InertStrategies:
+        def __getattr__(self, name):
+            return _InertStrategy()
+
+    st = _InertStrategies()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):          # bare @settings usage
+            return args[0]
+        return lambda f: f
+
+    def given(*_args, **_kwargs):
+        def deco(f):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco
+
+strategies = st

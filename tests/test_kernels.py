@@ -33,6 +33,33 @@ def test_quant_matmul_sweep(bits, shape, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("group,block_k", [
+    (32, 64),      # bk % group_size == 0: two groups per K tile
+    (64, 64),      # bk % group_size == 0: exactly one group per tile
+    (128, 64),     # group_size % bk == 0: each group spans two K tiles
+    (256, 64),     # group_size % bk == 0: one group covers ALL K tiles
+])
+def test_quant_matmul_group_tile_branches(bits, group, block_k):
+    """Parity of the Pallas dequant-matmul (interpret mode) vs the ref.py
+    oracle across both group/tile alignment branches."""
+    M, K, N = 16, 256, 64
+    rng = np.random.default_rng(bits * 100 + group)
+    codes = rng.integers(0, 1 << bits, (K, N)).astype(np.uint8)
+    scale = (rng.random((K // group, N)).astype(np.float32) + 0.5) * 0.1
+    zero = rng.integers(0, 1 << bits, (K // group, N)).astype(np.float32)
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    got = quant_matmul_op(x, packed, jnp.asarray(scale), jnp.asarray(zero),
+                          bits=bits, group_size=group,
+                          block_m=16, block_n=32, block_k=block_k)
+    want = ref.quant_matmul_ref(x, packed, jnp.asarray(scale),
+                                jnp.asarray(zero), bits=bits, group_size=group)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
 @pytest.mark.parametrize("shape", [(32, 128, 64), (16, 256, 32), (8, 64, 8)])
 def test_int8_matmul_sweep(shape):
     M, K, N = shape

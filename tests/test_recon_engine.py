@@ -1,0 +1,236 @@
+"""On-device reconstruction engine vs the NumPy reference path.
+
+Three contracts (ISSUE: jitted PAR hardening + scanned inner loop):
+  (a) jitted global-threshold hardening freezes EXACTLY the same variables
+      as the NumPy ``harden()`` — including score ties and use_inf_freeze;
+  (b) a full ``reconstruct_block`` with ``engine="device"`` reproduces
+      ``engine="reference"`` qmeta (codes, DST-folded scale) bit-for-bit at
+      fixed seed;
+  (c) the realized soft-rate trajectory tracks HANDCRAFTED_SOFT_RATE,
+      anchored at both ends (gentle ~10% first freeze, 0.0 soft at the end);
+plus the engine's host-sync guarantee (<= 1 blocking read per PAR iteration,
+exactly the optional log line).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core import recon_engine as RE
+from repro.core import tesseraq as TQ
+from repro.core.rtn import quantize_block_rtn, rtn_leaf
+
+QCFG = QuantConfig(bits=2, group_size=16)
+
+
+# -- fixtures ----------------------------------------------------------------
+
+def leaf_state(seed=0, shape=(32, 8), tie_fraction=0.0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=shape).astype(np.float32)
+    if tie_fraction:
+        # duplicate a slice of weights so hardness scores tie exactly and
+        # the joint threshold lands ON a tied score
+        flat = w.reshape(-1)
+        n = int(flat.size * tie_fraction)
+        flat[n:2 * n] = flat[:n]
+        w = flat.reshape(shape)
+    wj = jnp.asarray(w)
+    _, meta = rtn_leaf(wj, QCFG)
+    return TQ._leaf_state(wj, meta, QCFG)
+
+
+def two_linear_block(seed=0, d=32):
+    rng = np.random.default_rng(seed)
+    bp = {"wq": jnp.asarray(rng.normal(size=(d, d)), jnp.float32),
+          "w_up": jnp.asarray(rng.normal(size=(d, 2 * d)), jnp.float32)}
+
+    def apply(b, x, aux):
+        h = jnp.tanh(x @ b["wq"])
+        out = h @ b["w_up"]
+        if aux is not None:
+            out = out + aux
+        return out
+
+    X = rng.normal(size=(8, 6, d)).astype(np.float32)
+    return bp, apply, X
+
+
+def states_equal(a, b):
+    for p in a:
+        if not np.array_equal(np.asarray(a[p]["hard"]),
+                              np.asarray(b[p]["hard"])):
+            return False
+        if not np.array_equal(np.asarray(a[p]["nu"]), np.asarray(b[p]["nu"])):
+            return False
+    return True
+
+
+# -- (a) hardening parity ----------------------------------------------------
+
+@pytest.mark.parametrize("use_inf", [False, True])
+@pytest.mark.parametrize("tie_fraction", [0.0, 0.25])
+def test_harden_device_matches_reference(use_inf, tie_fraction):
+    states_np = {("a",): leaf_state(0, (32, 8), tie_fraction),
+                 ("b",): leaf_state(1, (16, 12), tie_fraction)}
+    states_dev = {p: dict(st) for p, st in states_np.items()}
+    # walk a whole schedule so later iterations start from frozen state
+    for rate in (0.9, 0.5, 0.2, 0.05, 0.0):
+        states_np = TQ.harden(states_np, rate, use_inf=use_inf)
+        states_dev = RE.harden_device(states_dev, rate, use_inf=use_inf)
+        assert states_equal(states_np, states_dev), \
+            f"freeze sets diverged at rate {rate}"
+
+
+def test_harden_device_tie_freezes_whole_tie_class():
+    """When the threshold lands on a tied score, BOTH paths freeze the whole
+    tie class (>= threshold), possibly overshooting the target count."""
+    st = leaf_state(3, (32, 8), tie_fraction=0.3)
+    total = st["nu"].size
+    a = TQ.harden({("w",): dict(st)}, 0.5, use_inf=False)
+    b = RE.harden_device({("w",): dict(st)}, 0.5, use_inf=False)
+    na = int((np.asarray(a[("w",)]["hard"]) != 0).sum())
+    nb = int((np.asarray(b[("w",)]["hard"]) != 0).sum())
+    assert na == nb
+    assert na >= total - int(total * 0.5)     # at least the target froze
+
+
+def test_harden_device_noop_when_target_above_current():
+    st = leaf_state(4)
+    frozen = RE.harden_device({("w",): st}, 0.5, use_inf=False)
+    again = RE.harden_device(frozen, 0.9, use_inf=False)   # nothing to do
+    np.testing.assert_array_equal(np.asarray(frozen[("w",)]["hard"]),
+                                  np.asarray(again[("w",)]["hard"]))
+
+
+# -- (b) full-block bit-for-bit parity ---------------------------------------
+
+@pytest.mark.parametrize("kwargs", [
+    {},
+    {"use_inf_freeze": True},
+    {"carry_opt_state": False},
+    {"dst": False},
+], ids=["default", "inf_freeze", "no_carry", "no_dst"])
+def test_device_engine_bit_for_bit(kwargs):
+    bp, apply, X = two_linear_block()
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    metas = {}
+    for engine in ("reference", "device"):
+        tcfg = TQ.TesseraQConfig(par_iterations=4, steps_per_iteration=12,
+                                 batch_size=4, engine=engine, **kwargs)
+        _, metas[engine] = TQ.reconstruct_block(
+            apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg)
+    for p in metas["reference"]:
+        np.testing.assert_array_equal(
+            np.asarray(metas["reference"][p]["codes"]),
+            np.asarray(metas["device"][p]["codes"]),
+            err_msg=f"codes diverged at {p}")
+        np.testing.assert_array_equal(
+            np.asarray(metas["reference"][p]["scale"]),
+            np.asarray(metas["device"][p]["scale"]),
+            err_msg=f"folded scale diverged at {p}")
+
+
+def test_device_engine_bit_for_bit_with_aux():
+    bp, apply, X = two_linear_block(seed=2)
+    rng = np.random.default_rng(7)
+    aux = (rng.normal(size=(8, 6, 2 * 32)) * 0.1).astype(np.float32)
+    Y = np.asarray(apply(bp, jnp.asarray(X), jnp.asarray(aux)))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    metas = {}
+    for engine in ("reference", "device"):
+        tcfg = TQ.TesseraQConfig(par_iterations=3, steps_per_iteration=10,
+                                 batch_size=4, engine=engine)
+        _, metas[engine] = TQ.reconstruct_block(
+            apply, bp, X, Y, aux, dict(qmeta), QCFG, tcfg)
+    for p in metas["reference"]:
+        np.testing.assert_array_equal(
+            np.asarray(metas["reference"][p]["codes"]),
+            np.asarray(metas["device"][p]["codes"]))
+
+
+def test_legacy_engine_codes_match_device():
+    """The pre-engine eager-Adam loop drifts from the fused step by ~1 ulp
+    (so folded scales are NOT bit-identical), but the discrete rounding
+    decisions still agree."""
+    bp, apply, X = two_linear_block(seed=9)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    metas = {}
+    for engine in ("legacy", "device"):
+        tcfg = TQ.TesseraQConfig(par_iterations=3, steps_per_iteration=10,
+                                 batch_size=4, engine=engine)
+        _, metas[engine] = TQ.reconstruct_block(
+            apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg)
+    for p in metas["legacy"]:
+        np.testing.assert_array_equal(
+            np.asarray(metas["legacy"][p]["codes"]),
+            np.asarray(metas["device"][p]["codes"]))
+        np.testing.assert_allclose(
+            np.asarray(metas["legacy"][p]["scale"]),
+            np.asarray(metas["device"][p]["scale"]), rtol=1e-5)
+
+
+# -- (c) soft-rate trajectory ------------------------------------------------
+
+def test_soft_rate_trajectory_matches_schedule():
+    """K == len(HANDCRAFTED_SOFT_RATE): the realized post-harden soft count
+    equals int(total * schedule[k]) every iteration (no ties in random
+    float32 scores), anchored at ~0.9 first and exactly 0.0 last."""
+    bp, apply, X = two_linear_block(seed=5, d=16)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    sr = TQ.HANDCRAFTED_SOFT_RATE
+    tcfg = TQ.TesseraQConfig(par_iterations=len(sr), steps_per_iteration=2,
+                             batch_size=4, engine="device")
+    log = []
+    TQ.reconstruct_block(apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg,
+                         log=log)
+    total = sum(np.asarray(bp[k]).size for k in ("wq", "w_up"))
+    realized = [l["soft_rate"] for l in log]
+    # both ends anchored ...
+    assert realized[0] == pytest.approx(int(total * sr[0]) / total, abs=1e-6)
+    assert realized[-1] == 0.0
+    # ... and every intermediate iteration hits its scheduled target
+    for k, r in enumerate(realized):
+        n_soft = r * total
+        assert n_soft == pytest.approx(int(total * sr[k]), abs=0.5), \
+            f"iter {k}: {n_soft} soft vs target {int(total * sr[k])}"
+    assert all(a >= b for a, b in zip(realized, realized[1:]))
+
+
+def test_soft_rate_schedule_stretch_anchors_for_small_k():
+    """K != len(schedule): the stretched schedule still starts at sr[0] and
+    ends at 0.0 (paper's gentle start / complete finish)."""
+    bp, apply, X = two_linear_block(seed=6, d=16)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    tcfg = TQ.TesseraQConfig(par_iterations=5, steps_per_iteration=2,
+                             batch_size=4, engine="device")
+    log = []
+    TQ.reconstruct_block(apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg,
+                         log=log)
+    total = sum(np.asarray(bp[k]).size for k in ("wq", "w_up"))
+    assert log[0]["soft_rate"] == pytest.approx(
+        int(total * TQ.HANDCRAFTED_SOFT_RATE[0]) / total, abs=1e-6)
+    assert log[-1]["soft_rate"] == 0.0
+
+
+# -- host-sync guarantee -----------------------------------------------------
+
+def test_device_engine_host_syncs():
+    bp, apply, X = two_linear_block(seed=8, d=16)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    K = 4
+    for log, expected in ((None, 0), ([], K)):
+        tcfg = TQ.TesseraQConfig(par_iterations=K, steps_per_iteration=5,
+                                 batch_size=4, engine="device")
+        RE.reset_sync_count()
+        TQ.reconstruct_block(apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg,
+                             log=log)
+        assert RE.sync_count() == expected, \
+            f"log={log is not None}: {RE.sync_count()} syncs, " \
+            f"expected {expected} (<= 1 per PAR iteration)"

@@ -26,8 +26,8 @@ def run_dryrun(args, timeout=540):
 
 def make_test_mesh():
     # reuse the single real device: a (1,1) mesh exercises the code paths
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_resolve_spec_divisibility_fallback():

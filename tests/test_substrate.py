@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticCorpus
@@ -100,6 +100,31 @@ def test_adam_reduces_quadratic():
         g = jax.grad(lambda q: jnp.sum(q["x"] ** 2))(p)
         p, st = opt.update(g, st, p)
     assert float(jnp.abs(p["x"]).max()) < 1e-2
+
+
+def test_adam_init_from_template_and_jitted_update():
+    """init() accepts ShapeDtypeStruct templates (no materialized params)
+    and jitted_update(donate=True) matches the eager update."""
+    opt = AdamW(lr=0.1)
+    p = {"x": jnp.asarray([3.0, -2.0]), "y": jnp.asarray([[1.0, 4.0]])}
+    tmpl = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), p)
+    st_t = opt.init(tmpl)
+    st_r = opt.init(p)
+    for a, b in zip(jax.tree_util.tree_leaves(st_t),
+                    jax.tree_util.tree_leaves(st_r)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    abstract = opt.init_abstract(p)
+    assert jax.tree_util.tree_structure(abstract) == \
+        jax.tree_util.tree_structure(st_r)
+
+    g = jax.grad(lambda q: jnp.sum(q["x"] ** 2) + jnp.sum(q["y"] ** 2))(p)
+    p_e, st_e = opt.update(g, opt.init(p), p)
+    p_j, st_j = opt.jitted_update(donate=True)(g, opt.init(p), p)
+    for a, b in zip(jax.tree_util.tree_leaves(p_e),
+                    jax.tree_util.tree_leaves(p_j)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    assert int(st_j.step) == int(st_e.step) == 1
 
 
 def test_grad_clip():

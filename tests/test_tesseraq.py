@@ -44,13 +44,15 @@ def test_harden_monotone_and_targets():
     assert (np.asarray(states[("w",)]["hard"]) != 0).all()
 
 
-def test_harden_freezes_lowest_scores_first():
+def test_harden_freezes_highest_scores_first():
+    """PAR commits the near-binary variables first (least perturbation when
+    rounded); the uncertain ones stay soft and keep optimizing."""
     _, st = leaf_state(1)
     hs = np.asarray(TQ.hardness_score(st["nu"]))
     states = TQ.harden({("w",): st}, 0.5, use_inf=False)
     frozen = np.asarray(states[("w",)]["hard"]) != 0
-    # every frozen score <= every surviving soft score
-    assert hs[frozen].max() <= hs[~frozen].min() + 1e-9
+    # every frozen score >= every surviving soft score
+    assert hs[frozen].min() >= hs[~frozen].max() - 1e-9
 
 
 def test_inf_freeze_equivalent():
