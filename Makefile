@@ -2,7 +2,7 @@ PY      ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow bench-smoke bench
+.PHONY: test test-slow test-multidevice lint bench-smoke bench
 
 # tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
 test:
@@ -12,8 +12,19 @@ test:
 test-slow:
 	$(PY) -m pytest -q -m ""
 
+# sharding + recon-engine suites on a fake 8-device host platform: runs the
+# mesh-parallel engine parity tests that skip on a single device
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q tests/test_recon_engine.py tests/test_sharding.py
+
+# ruff gate (same as the CI lint job; needs ruff on PATH)
+lint:
+	ruff check .
+
 # executes the reconstruction-engine speed benchmark end-to-end with tiny
-# step counts — catches perf-path breakage on every CI run
+# step counts — catches perf-path breakage on every CI run; emits
+# BENCH_recon.json (the CI perf trajectory artifact)
 bench-smoke:
 	$(PY) -m benchmarks.recon_speed --dryrun
 

@@ -9,15 +9,12 @@ from __future__ import annotations
 
 import os
 import pickle
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_reduced_config
-from repro.configs.base import QuantConfig
 from repro.core.tesseraq import TesseraQConfig
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.eval.ppl import choice_accuracy, make_choice_tasks, perplexity

@@ -5,7 +5,6 @@ RTN / AWQ — the paper's headline experiment at laptop scale.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.configs.base import QuantConfig
@@ -14,7 +13,6 @@ from repro.core.tesseraq import TesseraQConfig
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.eval.ppl import perplexity
 from repro.launch.steps import make_train_harness
-from repro.models import get_model
 
 
 def main():

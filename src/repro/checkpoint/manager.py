@@ -23,7 +23,6 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.qtensor import QTensor
 
 
 def _flatten(tree):

@@ -1,4 +1,5 @@
-"""Eager-mode capture of per-linear input activations inside a block.
+"""Eager-mode capture of per-linear input activations inside a block, plus
+the activation-stream utilities the pipelined ``quantize_model`` walk uses.
 
 AWQ/GPTQ need, for every linear W in a block, statistics of that linear's own
 input X (mean |X| per channel; a token subsample for the reconstruction
@@ -10,15 +11,24 @@ are mapped back to param paths.
 MoE expert weights see their own capacity-gathered inputs (zero-padded slots
 dilute ``mean_abs`` by a uniform factor that cancels under AWQ's relative
 scale search — documented approximation).
+
+Stream utilities (``split_minibatches`` / ``shard_stream`` /
+``capture_minibatch``) keep the calibration streams device-resident between
+blocks and, on a mesh, place every minibatch with its batch dim sharded over
+the data-parallel axes so the capture forward passes run mesh-parallel —
+the whole block walk stays mesh-resident.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.blocks import get_path, quant_leaf_paths
+from repro.launch.mesh import dp_axes, dp_size
 from repro.models import layers as L
 
 MAX_ROWS = 1024          # token subsample kept per linear for objectives
@@ -35,6 +45,35 @@ def stage_calibration(X, Y=None, aux=None) -> Tuple:
     Yd = jnp.asarray(Y, jnp.float32) if Y is not None else None
     auxd = jnp.asarray(aux) if aux is not None else None
     return Xd, Yd, auxd
+
+
+def capture_minibatch(mesh=None, base: int = 4) -> int:
+    """Minibatch size for the stream forward passes: ``base`` on a single
+    device, lifted to the mesh's DP degree when sharding so every device
+    owns at least one sample per capture dispatch."""
+    return base if mesh is None else max(base, dp_size(mesh))
+
+
+def shard_stream(x, mesh):
+    """Place one activation minibatch mesh-resident with its batch dim (0)
+    sharded over the DP axes; batch sizes that don't divide the DP degree
+    fall back to replication (same contract as ``sharding.resolve_spec``)."""
+    dp = dp_axes(mesh)
+    spec = P()
+    if dp and x.shape[0] % dp_size(mesh) == 0:
+        spec = P(dp if len(dp) > 1 else dp[0])
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def split_minibatches(x, mb: int, mesh=None) -> list:
+    """Split a (N, ...) stream into device-resident minibatches of ``mb``
+    rows (last one may be short); with ``mesh``, each part is placed with
+    its batch dim sharded over the DP axes so jitted forwards over the
+    parts run data-parallel."""
+    parts = [jnp.asarray(x[j:j + mb]) for j in range(0, x.shape[0], mb)]
+    if mesh is not None:
+        parts = [shard_stream(p, mesh) for p in parts]
+    return parts
 
 
 class LinearStats:

@@ -7,7 +7,7 @@ biased-gradient approach TesseraQ's PAR deliberately avoids — kept here
 faithfully as the baseline)."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,18 +40,21 @@ def _lwc_weight(w, g, b, qcfg: QuantConfig):
 def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
                       steps: int = 2000, lr: float = 1e-2, batch_size: int = 4,
                       seed: int = 0, log: Optional[list] = None,
-                      engine: str = "device", cache: Optional[dict] = None):
+                      engine: str = "device", cache: Optional[dict] = None,
+                      mesh=None):
     """LWC block reconstruction. Returns (bp_fq, qmeta).
 
     ``engine="device"`` runs the steps through the shared scanned
     ``ReconstructionEngine`` (one dispatch per log interval; per-block data
     travels through the engine's ``frozen`` argument, so a per-stage
     ``cache`` compiles the loop once for all identically-shaped blocks);
+    ``engine="sharded"`` is the same loop shard_mapped over ``mesh`` (or a
+    default all-device data mesh) with minibatches split over the DP axes;
     ``engine="reference"`` keeps the legacy per-step host loop.  Device log
     entries carry the loss of the LAST step in each chunk."""
-    if engine not in ("device", "reference", "legacy"):
+    if engine not in ("device", "sharded", "reference", "legacy"):
         raise ValueError(f"unknown engine {engine!r} (expected 'device', "
-                         "'reference' or 'legacy')")
+                         "'sharded', 'reference' or 'legacy')")
     # LWC has no fused-vs-eager split: "legacy" IS its reference host loop
     paths = quant_leaf_paths(bp)
     # init at sigmoid^-1(~1.0-) => gamma,beta start near 1 (4.0 -> 0.982)
@@ -71,12 +74,13 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
 
     opt = AdamW(lr=lr)
     frozen = {"bp": bp, "ws": ws}
-    if engine == "device":
-        eng = cache.get("device") if cache is not None else None
+    if engine in ("device", "sharded"):
+        eng = cache.get(engine) if cache is not None else None
         if eng is None:
-            eng = RE.ReconstructionEngine(loss_fn, opt)
+            m = RE.resolve_mesh(mesh) if engine == "sharded" else None
+            eng = RE.ReconstructionEngine(loss_fn, opt, mesh=m)
             if cache is not None:
-                cache["device"] = eng
+                cache[engine] = eng
         plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
                              total_steps=steps, seed=seed)
         st = eng.init(tr)

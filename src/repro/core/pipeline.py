@@ -8,11 +8,23 @@
   3. optimize rounding with TesseraQ (or LWC for the OmniQuant baseline);
   4. write the fake-quantized block back and advance the stream.
 
+The walk is **pipelined**: activation streams stay device-resident between
+blocks (no host round-trips), the FP targets of block k double as block
+k+1's FP input stream (the same forward pass, computed once), and — in the
+default ``input_source="fp"`` mode — block k+1's target forward is
+DISPATCHED before block k's reconstruction starts, so the capture of the
+next block's inputs overlaps the current block's optimization
+(double-buffered streams; JAX async dispatch does the overlapping).  With
+``engine="sharded"`` every capture minibatch is placed batch-sharded over
+the mesh's data-parallel axes, so the forwards and the reconstruction loop
+are all mesh-resident.
+
 ``pack_model`` then converts the calibrated model into the deployment form:
 stacked packed QTensors per linear, with DST folded into the scales.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional
 
@@ -24,23 +36,21 @@ from repro.configs.base import ModelConfig, QuantConfig
 from repro.core import awq as awq_mod
 from repro.core import gptq as gptq_mod
 from repro.core import omniquant as omni_mod
+from repro.core import recon_engine as re_mod
 from repro.core import rtn as rtn_mod
 from repro.core import signround as sr_mod
 from repro.core import tesseraq as tq_mod
-from repro.core.blocks import build_stages, get_path, quant_leaf_paths, set_path
-from repro.core.capture import capture_block_inputs, stage_calibration
+from repro.core.blocks import build_stages, get_path, set_path
+from repro.core.capture import (capture_block_inputs, capture_minibatch,
+                                split_minibatches, stage_calibration)
 from repro.core.quantizer import resolve_group
 from repro.core.qtensor import QTensor, pack
+from repro.launch.mesh import dp_size
 from repro.models.common import Ctx, DEFAULT_CTX
 
 
-def _minibatches(batch_list):
-    return batch_list
-
-
-def _stream(fn, batches, out_list):
-    outs = [np.asarray(fn(b)) for b in batches]
-    return np.concatenate(outs, 0)
+def _aux_part(auxs, j):
+    return auxs[j] if auxs is not None else None
 
 
 def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
@@ -61,6 +71,27 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
         the progressively-quantized stream, targets from the FP block)
     """
     tcfg = tcfg or tq_mod.TesseraQConfig()
+    mesh = None
+    if tcfg.engine == "sharded":
+        # resolve ONCE so the reconstruction engines and the capture
+        # forwards agree on the same mesh object; lift batch_size to a
+        # DP-divisible multiple (mirroring capture_minibatch) so the
+        # default config runs on any mesh, and clamp to the largest
+        # DP-divisible size the calibration pool can fill (stage_plan
+        # clamps to the pool, which would silently undo a bare lift) —
+        # direct reconstruct_block callers keep the engine's strict check
+        mesh = re_mod.resolve_mesh(tcfg.mesh)
+        D = dp_size(mesh)
+        n_pool = sum(jax.tree_util.tree_leaves(b)[0].shape[0]
+                     for b in batches)
+        if n_pool < D:
+            raise ValueError(
+                f"calibration pool ({n_pool} samples) is smaller than the "
+                f"mesh's data-parallel degree ({D}); add calibration data "
+                "or shrink the mesh")
+        bs = min(tcfg.batch_size + (-tcfg.batch_size % D),
+                 n_pool - n_pool % D)
+        tcfg = dataclasses.replace(tcfg, mesh=mesh, batch_size=bs)
     stages = build_stages(cfg, ctx)
     params_q = params
     saved: Dict[str, np.ndarray] = {}
@@ -70,44 +101,56 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
     X = X_fp = None
     for stage in stages:
         # stage input stream (None => continue the running stream)
-        per_batch = []
-        for b in batches:
-            x0 = stage.init_x(params_q, b, saved)
-            per_batch.append(x0)
+        per_batch = [stage.init_x(params_q, b, saved) for b in batches]
         if per_batch[0] is not None:
-            X = np.concatenate([np.asarray(x) for x in per_batch], 0)
+            X = jnp.concatenate([jnp.asarray(x) for x in per_batch], 0)
             X_fp = X
         aux = None
         aux_parts = [stage.make_aux(params_q, b, saved) for b in batches]
         if aux_parts[0] is not None:
-            aux = np.concatenate([np.asarray(a) for a in aux_parts], 0)
+            aux = jnp.concatenate([jnp.asarray(a) for a in aux_parts], 0)
 
         napply = jax.jit(stage.apply)
         # the reconstruction inner loop compiles once per stage and is
         # reused for every identically-shaped block in it
         recon_cache: Dict = {}
+        mb = capture_minibatch(mesh)
+        auxs = split_minibatches(aux, mb, mesh) if aux is not None else None
+
+        # double buffer (fp mode): the dispatched-but-unread FP outputs of
+        # the CURRENT block over the FP stream — they are both the
+        # reconstruction targets Y_i and the next FP inputs X_fp[i+1], and
+        # for block i+1 they were enqueued while block i reconstructed
+        fp_out = None
 
         for i in range(stage.n_blocks):
             t0 = time.time()
             bp_fp = stage.get_block(params_q, i)
-            mb = 4
-            src = X_fp if input_source == "fp" else X
-            xs = [jnp.asarray(src[j:j + mb])
-                  for j in range(0, src.shape[0], mb)]
-            auxs = ([jnp.asarray(aux[j:j + mb])
-                     for j in range(0, aux.shape[0], mb)]
-                    if aux is not None else None)
+            same_stream = X_fp is X
+            out_q = None
 
             if stage.calibrate:
+                src = X_fp if input_source == "fp" else X
+                src_parts = split_minibatches(src, mb, mesh)
                 # FP target block(theta, X) on the selected input stream
-                Y = np.concatenate(
-                    [np.asarray(napply(bp_fp, xs[j],
-                                       auxs[j] if auxs else None))
-                     for j in range(len(xs))], 0)
+                # (reused from the previous iteration's prefetch when the
+                # stream carries over)
+                if fp_out is None or input_source != "fp":
+                    fp_out = [napply(bp_fp, src_parts[j], _aux_part(auxs, j))
+                              for j in range(len(src_parts))]
+                # prefetch: dispatch block i+1's FP target forward NOW, so
+                # it executes while this block reconstructs below
+                next_fp_out = None
+                if input_source == "fp" and i + 1 < stage.n_blocks:
+                    bp_fp_next = stage.get_block(params_q, i + 1)
+                    next_fp_out = [napply(bp_fp_next, fp_out[j],
+                                          _aux_part(auxs, j))
+                                   for j in range(len(fp_out))]
+                Y = jnp.concatenate(fp_out, 0)
 
                 want_h = init == "gptq"
-                caps = (capture_block_inputs(stage.apply, bp_fp, xs, auxs,
-                                             want_hessian=want_h)
+                caps = (capture_block_inputs(stage.apply, bp_fp, src_parts,
+                                             auxs, want_hessian=want_h)
                         if init in ("awq", "gptq") else None)
                 if init == "awq":
                     bp_init, qmeta = awq_mod.quantize_block_awq(bp_fp, caps, qcfg)
@@ -127,54 +170,68 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
                 elif method == "omniquant":
                     bp_q, qmeta = omni_mod.reconstruct_block(
                         stage.apply, bp_fp, Xd, Yd, auxd, qcfg,
-                        steps=omni_steps, log=log, engine=tcfg.engine,
-                        cache=recon_cache)
+                        steps=omni_steps, batch_size=tcfg.batch_size,
+                        log=log, engine=tcfg.engine,
+                        cache=recon_cache, mesh=tcfg.mesh)
                 elif method == "signround":
                     bp_q, qmeta = sr_mod.reconstruct_block(
                         stage.apply, bp_fp, Xd, Yd, auxd, qmeta, qcfg,
                         steps=max(tcfg.par_iterations
                                   * tcfg.steps_per_iteration, 50),
-                        log=log, engine=tcfg.engine, cache=recon_cache)
+                        batch_size=tcfg.batch_size,
+                        log=log, engine=tcfg.engine, cache=recon_cache,
+                        mesh=tcfg.mesh)
                 else:
                     bp_q = bp_init
 
                 params_q = stage.set_block(params_q, i, bp_q)
                 for p_, m_ in qmeta.items():
                     qmeta_all[stage.pack_target(i) + tuple(p_)] = m_
-                # block-level report: recon error before/after
+                # block-level report: recon error of the written-back block
+                # (in quant mode this forward IS the stream advance — reused
+                # below instead of recomputed)
                 bq = stage.get_block(params_q, i)
-                err = float(np.mean([
-                    np.mean((np.asarray(napply(bq, xs[j],
-                                               auxs[j] if auxs else None),
-                                        np.float32)
-                             - np.asarray(Y[j * mb:(j + 1) * mb],
-                                          np.float32)) ** 2)
-                    for j in range(len(xs))]))
+                out_q = [napply(bq, src_parts[j], _aux_part(auxs, j))
+                         for j in range(len(src_parts))]
+                err = float(np.mean(
+                    [np.mean((np.asarray(out_q[j], np.float32)
+                              - np.asarray(fp_out[j], np.float32)) ** 2)
+                     for j in range(len(out_q))]))
                 report["blocks"].append(
                     {"stage": stage.name, "block": i, "recon_mse": err,
                      "secs": time.time() - t0, "log": log})
                 if verbose:
                     print(f"[{stage.name} {i}] mse={err:.3e} "
                           f"({time.time()-t0:.1f}s)")
-            # advance both streams
+
+            # advance the quantized stream through the written-back block
+            # (reusing the mse forward when it ran over this same stream:
+            # always in quant mode, and on the first block of an fp-mode
+            # stage, where X_fp still IS X)
             bq = stage.get_block(params_q, i)
-            xq_in = [jnp.asarray(X[j:j + mb])
-                     for j in range(0, X.shape[0], mb)]
-            X = np.concatenate(
-                [np.asarray(napply(bq, xq_in[j], auxs[j] if auxs else None))
-                 for j in range(len(xq_in))], 0)
-            if input_source == "fp":
-                xf_in = [jnp.asarray(X_fp[j:j + mb])
-                         for j in range(0, X_fp.shape[0], mb)]
-                X_fp = np.concatenate(
-                    [np.asarray(napply(bp_fp, xf_in[j],
-                                       auxs[j] if auxs else None))
-                     for j in range(len(xf_in))], 0)
+            if stage.calibrate and (input_source == "quant" or same_stream):
+                X = jnp.concatenate(out_q, 0)        # the mse forward above
             else:
+                xq_in = split_minibatches(X, mb, mesh)
+                X = jnp.concatenate(
+                    [napply(bq, xq_in[j], _aux_part(auxs, j))
+                     for j in range(len(xq_in))], 0)
+            # advance the FP stream
+            if input_source != "fp":
                 X_fp = X
+            elif stage.calibrate:
+                X_fp = Y             # the targets ARE the next FP inputs
+                fp_out = next_fp_out
+            elif same_stream:
+                X_fp = X             # uncalibrated block: bq == bp_fp
+            else:
+                xs_fp = split_minibatches(X_fp, mb, mesh)
+                X_fp = jnp.concatenate(
+                    [napply(bp_fp, xs_fp[j], _aux_part(auxs, j))
+                     for j in range(len(xs_fp))], 0)
 
         if stage.save_as:
-            saved[stage.save_as] = X
+            saved[stage.save_as] = np.asarray(X)
     return params_q, qmeta_all, report
 
 

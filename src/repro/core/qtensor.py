@@ -10,7 +10,6 @@ exactly like plain arrays.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

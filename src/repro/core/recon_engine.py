@@ -31,6 +31,35 @@ keeps the whole loop on the device:
     iteration is the optional log line, and it is routed through
     ``host_read`` so tests and benchmarks can count syncs.
 
+  * **Canonical (device-count-invariant) batch gradients** — the batch
+    dimension is the only dimension the sharded engine splits across
+    devices, so the reduction over it is associativity-pinned: the step
+    gradient is defined as the ordered mean of per-sample gradients
+    (``vmap`` lanes over the minibatch, one ordered ``sum`` over the sample
+    axis).  Per-lane arithmetic does not depend on how many lanes run
+    together, so the same minibatch yields bit-identical gradients whether
+    the lanes run on one device or are split across a mesh — up to
+    compiler scheduling: XLA may still compile a lane's GEMMs differently
+    inside different surrounding programs, which injects ~1-ulp noise at
+    long horizons.  The DISCRETE artifacts (hardened mask + packed codes)
+    absorb that noise and stay bit-identical at the calibration horizons
+    the tests and benchmark gates pin (see ``tests/test_recon_engine.py``
+    and ``benchmarks/recon_speed.py``).
+
+  * **Mesh-sharded soften phase** — with a ``mesh``, the same scanned step
+    runs under ``shard_map``: each step's minibatch is split over the mesh's
+    data-parallel axes (device r takes rows [r*bs/D, (r+1)*bs/D) of the
+    step's index-plan row), every device computes its local per-sample
+    gradient lanes, and the reduction is an ``all_gather`` of the lane
+    stacks in sample order followed by the same ordered sum — an ordered
+    psum, deterministic where a raw ``lax.psum`` would leave the summation
+    order to the backend.  Rounding variables, DST variables and Adam state
+    stay REPLICATED — every device applies the identical reduced gradient,
+    so the trainables never desynchronize across the mesh and the hardened
+    mask is computed from a single consistent copy.  The calibration pool
+    itself is replicated (it is small — the minibatch, not the pool, is the
+    thing worth sharding), which keeps the per-step gather local.
+
 The host-loop paths are kept alongside: ``TesseraQConfig.engine =
 "reference"`` (NumPy harden + fused jitted step — the oracle
 ``tests/test_recon_engine.py`` pins bit-for-bit against the device engine)
@@ -46,8 +75,11 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.capture import stage_calibration
+from repro.launch.mesh import (dp_axes, dp_size, make_data_mesh,
+                               shard_map_compat)
 
 # ---------------------------------------------------------------------------
 # host-sync accounting
@@ -156,6 +188,72 @@ class SignSGD:
 
 
 # ---------------------------------------------------------------------------
+# mesh plumbing for the sharded engine
+# ---------------------------------------------------------------------------
+
+def resolve_mesh(mesh=None):
+    """The mesh for ``engine="sharded"``: the caller's, or a 1-D pure
+    data-parallel mesh over every visible device (what the CI multi-device
+    job gets under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    return mesh if mesh is not None else make_data_mesh()
+
+
+def _dp_rank(mesh, dp):
+    """Linearized data-parallel rank inside a shard_map body (row-major over
+    the DP axes, matching how ``P(dp)`` would lay a dim over them)."""
+    r = jnp.zeros((), jnp.int32)
+    for a in dp:
+        r = r * mesh.shape[a] + jax.lax.axis_index(a)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# canonical (device-count-invariant) batch gradients
+# ---------------------------------------------------------------------------
+
+def make_per_sample_grad(loss_fn: Callable) -> Callable:
+    """Per-sample (lane) value-and-grad of a minibatch ``loss_fn``.
+
+    Returns ``f(tr, frozen, xb, yb, auxb) -> (loss_lanes, grad_lanes)`` where
+    both outputs carry a leading sample axis of length ``xb.shape[0]``.  Each
+    lane evaluates ``loss_fn`` on a size-1 slice of the minibatch, so lane
+    arithmetic is independent of how many lanes are vmapped together — the
+    property that makes the reduction below device-count invariant."""
+    vg = jax.value_and_grad(loss_fn)
+
+    def f(tr, frozen, xb, yb, auxb):
+        if auxb is None:
+            return jax.vmap(
+                lambda x1, y1: vg(tr, frozen, x1[None], y1[None], None)
+            )(xb, yb)
+        return jax.vmap(
+            lambda x1, y1, a1: vg(tr, frozen, x1[None], y1[None], a1[None])
+        )(xb, yb, auxb)
+    return f
+
+
+def _lane_mean(loss_lanes, grad_lanes):
+    """The ordered sample-axis reduction both engines share: one ``sum``
+    over axis 0 (a fixed left-to-right association for a given minibatch
+    size) divided by the lane count."""
+    bs = loss_lanes.shape[0]
+    grads = jax.tree_util.tree_map(lambda s: jnp.sum(s, axis=0) / bs,
+                                   grad_lanes)
+    return jnp.sum(loss_lanes) / bs, grads
+
+
+def make_canonical_grad(loss_fn: Callable) -> Callable:
+    """``value_and_grad`` with the canonical per-sample reduction — the
+    exact gradient HLO inside the device engine's scanned step, exposed so
+    the host-loop reference oracle can pin against it bit-for-bit."""
+    per_sample = make_per_sample_grad(loss_fn)
+
+    def grad_fn(tr, frozen, xb, yb, auxb):
+        return _lane_mean(*per_sample(tr, frozen, xb, yb, auxb))
+    return grad_fn
+
+
+# ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
 
@@ -199,24 +297,91 @@ class ReconstructionEngine:
     one XLA compilation of its scanned step — is reused for every
     identically-shaped block in a stage.  Callers hold the engine in a
     per-stage cache; compilation amortizes over the model's depth.
+
+    With ``mesh`` the scanned step runs under ``shard_map``, data-parallel
+    over the mesh's DP axes: the per-step minibatch is split evenly across
+    the DP degree, each device computes its per-sample gradient lanes, the
+    lane stacks are ``all_gather``-ed in sample order and reduced with the
+    SAME ordered sum the single-device engine applies to its own lane
+    stack — so ``engine="sharded"`` reproduces ``engine="device"``
+    hardened masks and packed codes bit-for-bit at the pinned calibration
+    horizons (folded scales track to ~1 ulp at long horizons, where XLA's
+    per-program compilation choices inject lane-level rounding noise the
+    discrete artifacts absorb).  Trainables, optimizer state and the frozen
+    side state enter and leave replicated (``P()`` specs); the per-step
+    update is identical on every device, so replication is an invariant of
+    the scan, not something that needs re-synchronizing.  The minibatch
+    size must divide by the DP degree (``run`` raises otherwise).
     """
 
-    def __init__(self, loss_fn: Callable, optimizer, *, donate: bool = True):
+    def __init__(self, loss_fn: Callable, optimizer, *, donate: bool = True,
+                 mesh=None):
         self.opt = optimizer
-        grad_fn = jax.value_and_grad(loss_fn)
+        self.mesh = mesh
+        self.dp_degree = 1 if mesh is None else dp_size(mesh)
+        per_sample = make_per_sample_grad(loss_fn)
         opt = optimizer
 
+        if mesh is None:
+            def grad_fn(tr, frozen, xb, yb, auxb):
+                return _lane_mean(*per_sample(tr, frozen, xb, yb, auxb))
+
+            def pick(i, r):
+                return i
+        else:
+            dp = dp_axes(mesh)
+            if not dp:
+                raise ValueError(f"mesh {mesh.axis_names} has no "
+                                 "data-parallel axes ('pod'/'data')")
+            D = self.dp_degree
+
+            def grad_fn(tr, frozen, xb, yb, auxb):
+                # local lanes -> full lane stack in sample order -> the same
+                # ordered reduction as the single-device engine: an ordered
+                # psum (all_gather + fixed-association sum) instead of a raw
+                # lax.psum, whose association the backend may choose freely
+                lv, grads = per_sample(tr, frozen, xb, yb, auxb)
+                lv = jax.lax.all_gather(lv, dp, axis=0, tiled=True)
+                grads = jax.tree_util.tree_map(
+                    lambda s: jax.lax.all_gather(s, dp, axis=0, tiled=True),
+                    grads)
+                return _lane_mean(lv, grads)
+
+            def pick(i, r):
+                # device r takes rows [r*bs_local, (r+1)*bs_local) of the
+                # step's (replicated) index-plan row: the global minibatch
+                # is identical to the single-device engine's, only its rows
+                # are computed on different devices
+                bs_local = i.shape[0] // D
+                return jax.lax.dynamic_slice_in_dim(i, r * bs_local,
+                                                    bs_local)
+
         def run(tr, opt_state, frozen, X, Y, aux, idx):
+            rank = None if mesh is None else _dp_rank(mesh, dp_axes(mesh))
+
             def step(carry, i):
                 tr, opt_state = carry
-                xb = jnp.take(X, i, axis=0)
-                yb = jnp.take(Y, i, axis=0)
-                auxb = jnp.take(aux, i, axis=0) if aux is not None else None
+                li = pick(i, rank)
+                xb = jnp.take(X, li, axis=0)
+                yb = jnp.take(Y, li, axis=0)
+                auxb = jnp.take(aux, li, axis=0) if aux is not None else None
                 lv, grads = grad_fn(tr, frozen, xb, yb, auxb)
                 tr, opt_state = opt.update(grads, opt_state, tr)
                 return (tr, opt_state), lv
-            (tr, opt_state), losses = jax.lax.scan(step, (tr, opt_state), idx)
+            (tr, opt_state), losses = jax.lax.scan(step, (tr, opt_state),
+                                                   idx)
             return tr, opt_state, losses[-1]
+
+        if mesh is not None:
+            # everything replicated: only the *computation* is sharded (via
+            # the rank-dependent slice of the index plan); replication
+            # checking is off (in shard_map_compat) because axis_index makes
+            # intermediate values device-varying even though the gather
+            # restores replication before the update
+            run = shard_map_compat(
+                run, mesh=mesh,
+                in_specs=(P(), P(), P(), P(), P(), P(), P()),
+                out_specs=(P(), P(), P()))
 
         # trainables + optimizer state are loop carries: donate them so the
         # update happens in place where the backend supports aliasing
@@ -233,5 +398,10 @@ class ReconstructionEngine:
         caller's (counted) choice."""
         steps = plan.total_steps - start if steps is None else steps
         idx = plan.index_plan[start:start + steps]
+        if idx.shape[1] % self.dp_degree:
+            raise ValueError(
+                f"minibatch size {idx.shape[1]} does not divide by the "
+                f"mesh's data-parallel degree {self.dp_degree}; pick a "
+                "batch_size that is a multiple of it (or shrink the mesh)")
         return self._run(trainables, opt_state, frozen,
                          plan.X, plan.Y, plan.aux, idx)

@@ -47,19 +47,21 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
                       qcfg: QuantConfig, *, steps: int = 200, lr: float = 5e-3,
                       batch_size: int = 4, seed: int = 0,
                       log: Optional[list] = None, engine: str = "device",
-                      cache: Optional[dict] = None):
+                      cache: Optional[dict] = None, mesh=None):
     """Sign-SGD rounding optimization on one block.  qmeta supplies the
     (AWQ/RTN) scale/zero/act_scale init, exactly as for TesseraQ.
 
     ``engine="device"`` scans the sign-SGD steps on device through the shared
     ``ReconstructionEngine`` (with ``SignSGD`` as the optimizer; per-block
     data travels through ``frozen``, so a per-stage ``cache`` compiles once
-    for all identically-shaped blocks); ``engine="reference"`` keeps the
+    for all identically-shaped blocks); ``engine="sharded"`` is the same
+    loop shard_mapped over ``mesh`` (or a default all-device data mesh) with
+    minibatches split over the DP axes; ``engine="reference"`` keeps the
     legacy per-step host loop.  Device log entries carry the loss of the
     LAST step in each chunk."""
-    if engine not in ("device", "reference", "legacy"):
+    if engine not in ("device", "sharded", "reference", "legacy"):
         raise ValueError(f"unknown engine {engine!r} (expected 'device', "
-                         "'reference' or 'legacy')")
+                         "'sharded', 'reference' or 'legacy')")
     # sign-SGD has no fused-vs-eager split: "legacy" IS its reference loop
     paths = quant_leaf_paths(bp)
     fixed = {p: {"scale": qmeta[p]["scale"], "zero": qmeta[p]["zero"],
@@ -85,13 +87,15 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
         return jnp.mean(jnp.square(out.astype(jnp.float32) - yb))
 
     frozen = {"bp": bp, "fixed": fixed}
-    if engine == "device":
-        eng = cache.get("device") if cache is not None else None
+    if engine in ("device", "sharded"):
+        eng = cache.get(engine) if cache is not None else None
         if eng is None:
+            m = RE.resolve_mesh(mesh) if engine == "sharded" else None
             eng = RE.ReconstructionEngine(
-                loss_fn, RE.SignSGD(lr=lr, total_steps=steps, clip=0.5))
+                loss_fn, RE.SignSGD(lr=lr, total_steps=steps, clip=0.5),
+                mesh=m)
             if cache is not None:
-                cache["device"] = eng
+                cache[engine] = eng
         plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
                              total_steps=steps, seed=seed)
         st = eng.init(vs)

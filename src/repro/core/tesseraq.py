@@ -29,17 +29,29 @@ Two interchangeable inner-loop engines (``TesseraQConfig.engine``):
     steps with per-step host batch gather, but the (grad + Adam) step body
     fused into one jitted function — the exact HLO the device engine scans
     over, so ``tests/test_recon_engine.py`` pins the two bit-for-bit.
-  * ``"legacy"`` — the original pre-engine path: jitted gradient only, the
-    Adam update dispatched EAGERLY per tree leaf.  Kept as the benchmark
-    baseline (``benchmarks/recon_speed.py``); its eager optimizer arithmetic
-    differs from the fused step by ~1 ulp, so it tracks the other two only
-    up to float32 rounding (codes match, folded scales drift in the last
-    bit).
+  * ``"legacy"`` — the original pre-engine path: jitted batch-mean
+    gradient only, the Adam update dispatched EAGERLY per tree leaf.  Kept
+    as the benchmark baseline (``benchmarks/recon_speed.py``); its eager
+    optimizer arithmetic and non-canonical (single fused reduce) batch
+    gradient differ from the engine step by ~1 ulp, so it tracks the other
+    engines only up to float32 rounding (codes match, folded scales drift
+    in the last bits).
+  * ``"sharded"`` — the device engine's scanned step under ``shard_map`` on
+    ``TesseraQConfig.mesh`` (default: a 1-D data mesh over every visible
+    device): minibatches split over the mesh's DP axes, per-sample gradient
+    lanes all-gathered in sample order and reduced with the engine's
+    canonical ordered sum (an ordered psum), rounding/DST variables and
+    Adam state replicated.  The global minibatch sequence AND the gradient
+    reduction order are identical to ``"device"``, so the sharded engine
+    reproduces the device engine's hardened masks and packed codes
+    bit-for-bit at the pinned calibration horizons, with folded scales
+    tracking to ~1 ulp (pinned by ``tests/test_recon_engine.py`` and the
+    ``benchmarks/recon_speed.py`` parity gate).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +89,10 @@ class TesseraQConfig:
     par: bool = True                      # progressive adaptive rounding
     use_inf_freeze: bool = False          # paper's memory-light hardening
     seed: int = 0
-    engine: str = "device"                # "device" | "reference" | "legacy"
+    engine: str = "device"     # "device" | "reference" | "legacy" | "sharded"
+    # mesh for engine="sharded" (None: 1-D data mesh over all devices); the
+    # pipeline also shards its capture forward passes over this mesh
+    mesh: Any = None
     # keep Adam moments across PAR iterations (both engines honor this; the
     # surviving soft variables continue from warm state instead of cold
     # restarts after every harden)
@@ -256,11 +271,12 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
                    log: Optional[list], cache: Optional[dict] = None):
     """Legacy host loop: NumPy harden, per-step host batch gather, one
     dispatch per step.  The (grad + Adam) step body is a single jitted
-    function — the same HLO the device engine scans over."""
+    function — the same HLO (canonical per-sample gradient reduction
+    included) the device engine scans over."""
     opt = AdamW(lr=tcfg.lr)
     step_fn = cache.get("reference") if cache is not None else None
     if step_fn is None:
-        grad_fn = jax.value_and_grad(_make_loss_fn(apply, qcfg, tcfg))
+        grad_fn = RE.make_canonical_grad(_make_loss_fn(apply, qcfg, tcfg))
 
         @jax.jit
         def step_fn(tr, opt_state, frozen, xb, yb, auxb):
@@ -345,22 +361,25 @@ def _run_legacy(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
 
 
 def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
-                log: Optional[list], cache: Optional[dict] = None):
+                log: Optional[list], cache: Optional[dict] = None, *,
+                mesh=None):
     """On-device engine: jitted hardening, scanned soften phase, pre-staged
     batches.  The only blocking host read per PAR iteration is the optional
     log line (loss + realized soft rate fused into one transfer).
 
     Block params travel inside the engine's ``frozen`` argument, so with a
     per-stage ``cache`` the scanned step compiles ONCE and is reused for
-    every identically-shaped block."""
+    every identically-shaped block.  With ``mesh`` the scanned step is the
+    shard_map data-parallel variant (engine="sharded")."""
     K = tcfg.par_iterations if tcfg.par else 1
     T = tcfg.steps_per_iteration
-    eng = cache.get("device") if cache is not None else None
+    key = "device" if mesh is None else "sharded"
+    eng = cache.get(key) if cache is not None else None
     if eng is None:
         eng = RE.ReconstructionEngine(_make_loss_fn(apply, qcfg, tcfg),
-                                      AdamW(lr=tcfg.lr))
+                                      AdamW(lr=tcfg.lr), mesh=mesh)
         if cache is not None:
-            cache["device"] = eng
+            cache[key] = eng
     plan = RE.stage_plan(X, Y, aux, batch_size=tcfg.batch_size,
                          total_steps=K * T, seed=tcfg.seed)
 
@@ -391,6 +410,15 @@ def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
     return states
 
 
+def _run_sharded(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
+                 log: Optional[list], cache: Optional[dict] = None):
+    """Mesh data-parallel engine: the device engine's loop with the scanned
+    step shard_mapped over ``tcfg.mesh`` (or a default all-device data
+    mesh).  ``tcfg.batch_size`` must be a multiple of the mesh's DP degree."""
+    return _run_device(apply, bp, X, Y, aux, qcfg, tcfg, states, log, cache,
+                       mesh=RE.resolve_mesh(tcfg.mesh))
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -413,7 +441,7 @@ def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
     states = {p: _leaf_state(get_path(bp, p), qmeta[p], qcfg) for p in paths}
 
     runners = {"device": _run_device, "reference": _run_reference,
-               "legacy": _run_legacy}
+               "legacy": _run_legacy, "sharded": _run_sharded}
     if tcfg.engine not in runners:
         raise ValueError(f"unknown engine {tcfg.engine!r} "
                          f"(expected one of {sorted(runners)})")
@@ -444,6 +472,9 @@ def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
             "act_scale": st["act_scale"],
             "dst": jnp.asarray(dst_factor) if dst_factor is not None else None,
             "codes": jnp.asarray(q, jnp.uint8).reshape(_wshape(st["nu"])),
+            # final hardened mask (grouped layout) — the engine-parity tests
+            # pin it bit-for-bit across device/sharded
+            "hard": np.asarray(st["hard"]),
         }
     return bp, new_meta
 

@@ -14,7 +14,7 @@ Properties needed at 1000-node scale and provided here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -8,12 +8,11 @@ from __future__ import annotations
 
 import functools
 import math
-import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import PACK_FACTOR, QTensor
+from repro.core.qtensor import QTensor
 from repro.kernels import ref
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.quant_matmul import quant_matmul

@@ -37,9 +37,41 @@ def make_mesh(shape, axes=None):
     return _mk(tuple(shape), tuple(axes))
 
 
+def make_data_mesh(n_devices=None):
+    """1-D pure data-parallel mesh over ``n_devices`` (default: all visible
+    devices).  The default mesh for ``engine="sharded"`` reconstruction when
+    the caller does not hand one in — on a host platform forced to N devices
+    this is the N-way calibration mesh the CI multi-device job exercises."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return _mk((n,), ("data",))
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def dp_size(mesh, axes=None) -> int:
+    """Total data-parallel degree (product of the DP axis extents; pass
+    ``axes`` to honor a caller-resolved axis set, e.g. ``Ctx.dp_axes``)."""
+    n = 1
+    for a in (dp_axes(mesh) if axes is None else axes):
+        n *= mesh.shape[a]
+    return n
+
+
 def tp_axis(mesh):
     return "model" if "model" in mesh.axis_names else None
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: newer jax exposes
+    ``jax.shard_map(..., check_vma=)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  Replication
+    checking is disabled on both — the bodies we wrap use ``axis_index``,
+    which the older checkers reject."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

@@ -8,11 +8,8 @@ runs on 8-chip test meshes and 512-chip production meshes unmodified
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

@@ -5,19 +5,18 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, QuantConfig, ShapeConfig
 from repro.core.blocks import QUANT_LEAF_NAMES
 from repro.core.qtensor import PACK_FACTOR, QTensor
 from repro.core.quantizer import resolve_group
 from repro.launch.mesh import dp_axes, tp_axis
-from repro.launch.sharding import (batch_shardings, cache_shardings,
-                                   make_sharder, param_shardings)
+from repro.launch.sharding import (batch_shardings, make_sharder,
+                                   param_shardings)
 from repro.models import get_model
 from repro.models.common import Ctx
 from repro.optim.adam import AdamW, clip_by_global_norm

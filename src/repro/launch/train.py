@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_reduced_config

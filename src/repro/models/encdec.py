@@ -4,7 +4,6 @@ per the assignment: ``input_specs`` provides precomputed frame embeddings
 self- and cross-attention, KV caches) is real."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

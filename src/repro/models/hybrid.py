@@ -10,7 +10,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import ssm, transformer
 from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 take_layer, update_cache)
+                                 take_layer)
 
 
 def n_attn_sites(cfg: ModelConfig) -> int:

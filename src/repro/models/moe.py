@@ -15,12 +15,12 @@ Two code paths share the same math:
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_mod
 from repro.models import layers as L
 from repro.models.common import Ctx
 
@@ -115,11 +115,9 @@ def moe_ffn(mp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
     n_shards = mesh.shape[ax]
     assert e % n_shards == 0, f"{e} experts not divisible by {n_shards} EP shards"
     e_local = e // n_shards
-    dp_size = 1
-    for a in ctx.dp_axes:
-        dp_size *= mesh.shape[a]
+    dp_degree = mesh_mod.dp_size(mesh, ctx.dp_axes)
     # capacity is per data shard: each shard routes its own resident tokens
-    cap = _capacity(B * S // dp_size, e, k, cfg.moe.capacity_factor)
+    cap = _capacity(B * S // dp_degree, e, k, cfg.moe.capacity_factor)
     P = jax.sharding.PartitionSpec
     dp = tuple(ctx.dp_axes) or None
 
@@ -130,10 +128,9 @@ def moe_ffn(mp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
                             capacity=cap, act_bits=ctx.act_bits)
         return jax.lax.psum(y, ax)
 
-    y = jax.shard_map(
+    y = mesh_mod.shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(P(dp), P(dp), P(dp), P(ax), P(ax), P(ax)),
         out_specs=P(dp),
-        check_vma=False,
     )(x2d, idx, gate, mp["w_gate"], mp["w_up"], mp["w_down"])
     return y.reshape(B, S, d)

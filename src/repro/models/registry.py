@@ -11,13 +11,13 @@ Batches are dicts: {"tokens"} (+ "frames" for encdec, "patches" for vlm).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, hybrid, rwkv, transformer, vlm
-from repro.models.common import Ctx, DEFAULT_CTX
+from repro.models.common import DEFAULT_CTX
 
 
 @dataclasses.dataclass(frozen=True)

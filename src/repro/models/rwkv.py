@@ -14,8 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 take_layer)
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat)
 from repro.models.ssm import chunked_linear_attention, step_linear_attention
 
 DECAY_LORA = 64

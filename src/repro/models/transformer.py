@@ -6,7 +6,7 @@ HLO stays O(1) in depth (essential for the 126-layer 405B dry-run).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import layers as L
 from repro.models import transformer
 from repro.models.common import Ctx, DEFAULT_CTX
 

@@ -6,7 +6,7 @@ gradient descent (paper: Adam, lr 1e-3, ~250 steps per PAR iteration).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

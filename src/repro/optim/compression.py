@@ -15,7 +15,6 @@ Two entry points:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -8,7 +8,6 @@ import pytest
 from repro.configs import get_reduced_config
 from repro.configs.base import QuantConfig
 from repro.core import pack_model, quantize_model
-from repro.core.tesseraq import TesseraQConfig
 from repro.models import get_model
 from repro.models import layers as L
 

@@ -1,6 +1,5 @@
 """Per-kernel shape/dtype sweeps, allclose against the ref.py oracles
 (interpret mode executes the Pallas body on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

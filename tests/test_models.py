@@ -84,7 +84,7 @@ def test_prefill_decode_consistency(arch):
 
 def test_moe_routing_matches_dense_dispatch():
     """Capacity dispatch with ample capacity == explicit per-token top-k."""
-    from repro.configs.base import MoEConfig, ModelConfig
+    from repro.configs.base import MoEConfig
     from repro.models.moe import init_moe_ffn, moe_ffn, _route
     from repro.models.common import DEFAULT_CTX
     import dataclasses

@@ -6,7 +6,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import QuantConfig
 from repro.core import quantizer as Q
-from repro.core.qtensor import PACK_FACTOR, QTensor, pack, qmatmul, unpack
+from repro.core.qtensor import PACK_FACTOR, pack, qmatmul, unpack
 
 
 @st.composite

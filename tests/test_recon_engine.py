@@ -1,6 +1,6 @@
 """On-device reconstruction engine vs the NumPy reference path.
 
-Three contracts (ISSUE: jitted PAR hardening + scanned inner loop):
+Four contracts (jitted PAR hardening + scanned inner loop + mesh sharding):
   (a) jitted global-threshold hardening freezes EXACTLY the same variables
       as the NumPy ``harden()`` — including score ties and use_inf_freeze;
   (b) a full ``reconstruct_block`` with ``engine="device"`` reproduces
@@ -8,6 +8,12 @@ Three contracts (ISSUE: jitted PAR hardening + scanned inner loop):
       fixed seed;
   (c) the realized soft-rate trajectory tracks HANDCRAFTED_SOFT_RATE,
       anchored at both ends (gentle ~10% first freeze, 0.0 soft at the end);
+  (d) ``engine="sharded"`` on a data-parallel mesh reproduces
+      ``engine="device"`` bit-for-bit (hardened mask, codes and folded
+      scales) — on a degenerate 1-device mesh always, and on the real
+      multi-device mesh when the test process sees >1 device (the CI
+      multi-device job runs this file under
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
 plus the engine's host-sync guarantee (<= 1 blocking read per PAR iteration,
 exactly the optional log line).
 """
@@ -17,9 +23,12 @@ import numpy as np
 import pytest
 
 from repro.configs.base import QuantConfig
+from repro.core import omniquant as OQ
 from repro.core import recon_engine as RE
+from repro.core import signround as SR
 from repro.core import tesseraq as TQ
 from repro.core.rtn import quantize_block_rtn, rtn_leaf
+from repro.launch.mesh import dp_size, make_data_mesh, make_mesh
 
 QCFG = QuantConfig(bits=2, group_size=16)
 
@@ -216,6 +225,235 @@ def test_soft_rate_schedule_stretch_anchors_for_small_k():
     assert log[0]["soft_rate"] == pytest.approx(
         int(total * TQ.HANDCRAFTED_SOFT_RATE[0]) / total, abs=1e-6)
     assert log[-1]["soft_rate"] == 0.0
+
+
+# -- (d) mesh-sharded engine parity ------------------------------------------
+
+def _multidevice_mesh():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    mesh = make_data_mesh()
+    if dp_size(mesh) > 8:
+        pytest.skip("fixture calibration pool has 8/16 samples")
+    return mesh
+
+
+def _assert_meta_equal(a, b, *, what):
+    for p in a:
+        np.testing.assert_array_equal(
+            np.asarray(a[p]["hard"]), np.asarray(b[p]["hard"]),
+            err_msg=f"{what}: hardened mask diverged at {p}")
+        np.testing.assert_array_equal(
+            np.asarray(a[p]["codes"]), np.asarray(b[p]["codes"]),
+            err_msg=f"{what}: codes diverged at {p}")
+        np.testing.assert_array_equal(
+            np.asarray(a[p]["scale"]), np.asarray(b[p]["scale"]),
+            err_msg=f"{what}: folded scale diverged at {p}")
+
+
+def _run_both(engines, kwargs, *, seed=11, aux_seed=None, bs):
+    bp, apply, X = two_linear_block(seed=seed)
+    aux = None
+    if aux_seed is not None:
+        rng = np.random.default_rng(aux_seed)
+        aux = (rng.normal(size=(8, 6, 64)) * 0.1).astype(np.float32)
+    Y = np.asarray(apply(bp, jnp.asarray(X),
+                         jnp.asarray(aux) if aux is not None else None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    metas = {}
+    for engine, mesh in engines.items():
+        tcfg = TQ.TesseraQConfig(par_iterations=4, steps_per_iteration=12,
+                                 batch_size=bs, engine=engine, mesh=mesh,
+                                 **kwargs)
+        _, metas[engine] = TQ.reconstruct_block(
+            apply, bp, X, Y, aux, dict(qmeta), QCFG, tcfg)
+    return metas
+
+
+def test_sharded_engine_1device_mesh_bit_for_bit():
+    """Degenerate sharding (1-device data mesh) must change nothing — runs
+    in the plain tier-1 suite on a single device."""
+    mesh = make_mesh((1,), ("data",))
+    metas = _run_both({"device": None, "sharded": mesh}, {}, bs=4)
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded(1-dev mesh) vs device")
+
+
+def test_sharded_engine_default_mesh_resolution():
+    """engine="sharded" with mesh=None resolves to a data mesh over all
+    visible devices (whatever their count) and still matches device."""
+    if len(jax.devices()) > 8:
+        pytest.skip("fixture calibration pool has 8 samples")
+    metas = _run_both({"device": None, "sharded": None}, {},
+                      bs=len(jax.devices()))
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded(default mesh) vs device")
+
+
+@pytest.mark.parametrize("kwargs", [
+    {},
+    {"use_inf_freeze": True},
+    {"carry_opt_state": False},
+    {"dst": False},
+], ids=["default", "inf_freeze", "no_carry", "no_dst"])
+def test_sharded_engine_bit_for_bit_multidevice(kwargs):
+    """The acceptance contract: sharded on a real multi-device mesh is
+    bit-identical to the device engine (mask, codes AND folded scales at
+    this calibration horizon)."""
+    mesh = _multidevice_mesh()
+    metas = _run_both({"device": None, "sharded": mesh}, kwargs,
+                      bs=dp_size(mesh))
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded vs device")
+
+
+def test_sharded_engine_bit_for_bit_multidevice_with_aux():
+    mesh = _multidevice_mesh()
+    metas = _run_both({"device": None, "sharded": mesh}, {}, seed=2,
+                      aux_seed=7, bs=dp_size(mesh))
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded vs device (aux)")
+
+
+def test_sharded_engine_three_way_multidevice():
+    """sharded == device == reference on identical inputs."""
+    mesh = _multidevice_mesh()
+    metas = _run_both({"reference": None, "device": None, "sharded": mesh},
+                      {}, bs=dp_size(mesh))
+    _assert_meta_equal(metas["reference"], metas["device"],
+                       what="device vs reference")
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded vs device")
+
+
+def test_sharded_engine_batch_divisibility_error():
+    mesh = _multidevice_mesh()
+    bp, apply, X = two_linear_block(seed=3)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    # N.B. stage_plan clamps batch_size to the pool size, so pick a bs
+    # UNDER the DP degree that still doesn't divide it
+    tcfg = TQ.TesseraQConfig(par_iterations=1, steps_per_iteration=2,
+                             batch_size=dp_size(mesh) - 1, engine="sharded",
+                             mesh=mesh)
+    with pytest.raises(ValueError, match="data-parallel degree"):
+        TQ.reconstruct_block(apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg)
+
+
+def test_sharded_engine_rejects_meshes_without_dp_axes():
+    mesh = make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="no data-parallel axes"):
+        RE.ReconstructionEngine(lambda tr, fr, x, y, a: 0.0, TQ.AdamW(lr=1e-3),
+                                mesh=mesh)
+
+
+def test_omniquant_signround_sharded_match_device():
+    """The baselines share the engine: sharded == device for LWC (AdamW)
+    and SignRound (SignSGD) too."""
+    mesh = (make_data_mesh() if 2 <= len(jax.devices()) <= 8
+            else make_mesh((1,), ("data",)))
+    bs = dp_size(mesh)
+    bp, apply, X = two_linear_block(seed=4)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    for name, run in (
+        ("omniquant", lambda eng, m: OQ.reconstruct_block(
+            apply, bp, X, Y, None, QCFG, steps=30, batch_size=bs,
+            engine=eng, mesh=m)),
+        ("signround", lambda eng, m: SR.reconstruct_block(
+            apply, bp, X, Y, None, dict(qmeta), QCFG, steps=30,
+            batch_size=bs, engine=eng, mesh=m)),
+    ):
+        _, md = run("device", None)
+        _, ms = run("sharded", mesh)
+        for p in md:
+            np.testing.assert_array_equal(
+                np.asarray(md[p]["codes"]), np.asarray(ms[p]["codes"]),
+                err_msg=f"{name}: codes diverged at {p}")
+            np.testing.assert_allclose(
+                np.asarray(md[p]["scale"]), np.asarray(ms[p]["scale"]),
+                rtol=1e-5, err_msg=f"{name}: scale diverged at {p}")
+
+
+def test_sharded_engine_host_syncs():
+    """The sharded engine keeps the device engine's host-sync contract."""
+    mesh = make_mesh((1,), ("data",))
+    bp, apply, X = two_linear_block(seed=8, d=16)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    K = 3
+    tcfg = TQ.TesseraQConfig(par_iterations=K, steps_per_iteration=5,
+                             batch_size=4, engine="sharded", mesh=mesh)
+    RE.reset_sync_count()
+    TQ.reconstruct_block(apply, bp, X, Y, None, dict(qmeta), QCFG, tcfg,
+                         log=[])
+    assert RE.sync_count() == K
+
+
+def _tiny_walk(engine, *, num_layers=2, batch_size=8, K=2, T=4):
+    from repro.configs import get_reduced_config
+    from repro.core.pipeline import quantize_model
+    from repro.models import get_model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(num_layers=num_layers)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (8, 12)))}]
+    tcfg = TQ.TesseraQConfig(par_iterations=K, steps_per_iteration=T,
+                             batch_size=batch_size, engine=engine)
+    return quantize_model(cfg, params, batches,
+                          QuantConfig(bits=2, group_size=32),
+                          method="tesseraq", init="rtn", tcfg=tcfg)
+
+
+def test_quantize_model_sharded_end_to_end():
+    """The headline path: a full quantize_model walk with engine="sharded"
+    (mesh-resident streams, sharded capture forwards, prefetch pipeline)
+    matches engine="device" on every block's hardened mask and codes."""
+    _multidevice_mesh()
+    metas = {e: _tiny_walk(e)[1] for e in ("device", "sharded")}
+    assert set(metas["device"]) == set(metas["sharded"])
+    for k in metas["device"]:
+        np.testing.assert_array_equal(
+            np.asarray(metas["device"][k]["hard"]),
+            np.asarray(metas["sharded"][k]["hard"]),
+            err_msg=f"walk: hardened mask diverged at {k}")
+        np.testing.assert_array_equal(
+            np.asarray(metas["device"][k]["codes"]),
+            np.asarray(metas["sharded"][k]["codes"]),
+            err_msg=f"walk: codes diverged at {k}")
+
+
+def test_quantize_model_sharded_lifts_default_batch():
+    """quantize_model lifts a non-divisible default batch_size to the DP
+    degree instead of dying mid-walk in the engine."""
+    _multidevice_mesh()
+    _, qmeta, report = _tiny_walk("sharded", num_layers=1, batch_size=4,
+                                  K=1, T=2)
+    assert report["blocks"] and qmeta
+
+
+def test_quantize_model_sharded_pool_smaller_than_mesh_fails_fast():
+    """A calibration pool below the DP degree can never fill a divisible
+    minibatch — quantize_model must say so up front, not mid-walk."""
+    mesh = _multidevice_mesh()
+    from repro.configs import get_reduced_config
+    from repro.core.pipeline import quantize_model
+    from repro.models import get_model
+    cfg = get_reduced_config("tinyllama-1.1b").replace(num_layers=1)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (dp_size(mesh) - 1, 12)))}]
+    tcfg = TQ.TesseraQConfig(par_iterations=1, steps_per_iteration=2,
+                             batch_size=4, engine="sharded")
+    with pytest.raises(ValueError, match="calibration pool"):
+        quantize_model(cfg, params, batches,
+                       QuantConfig(bits=2, group_size=32),
+                       method="tesseraq", init="rtn", tcfg=tcfg)
 
 
 # -- host-sync guarantee -----------------------------------------------------

@@ -6,7 +6,6 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -28,6 +27,87 @@ def make_test_mesh():
     # reuse the single real device: a (1,1) mesh exercises the code paths
     from repro.launch.mesh import make_mesh
     return make_mesh((1, 1), ("data", "model"))
+
+
+# -- mesh helper edge cases ------------------------------------------------
+
+def test_mesh_helpers_on_1device_meshes():
+    from repro.launch.mesh import (dp_axes, dp_size, make_data_mesh,
+                                   make_mesh, tp_axis)
+    m2 = make_mesh((1, 1))
+    assert m2.axis_names == ("data", "model")
+    assert dp_axes(m2) == ("data",)
+    assert dp_size(m2) == 1
+    assert tp_axis(m2) == "model"
+
+    m1 = make_data_mesh(1)
+    assert m1.axis_names == ("data",)
+    assert dp_axes(m1) == ("data",)
+    assert dp_size(m1) == 1
+    assert tp_axis(m1) is None
+
+    # a 1-axis mesh from the generic constructor defaults to the data axis
+    assert make_mesh((1,)).axis_names == ("data",)
+
+
+def test_make_data_mesh_spans_all_devices():
+    from repro.launch.mesh import dp_size, make_data_mesh
+    assert dp_size(make_data_mesh()) == len(jax.devices())
+
+
+def test_make_mesh_axis_name_defaults(monkeypatch):
+    """Axis naming for 2- and 3-axis shapes without constructing devices."""
+    import repro.launch.mesh as M
+    calls = []
+    monkeypatch.setattr(M, "_mk", lambda shape, axes: calls.append(
+        (shape, axes)))
+    M.make_mesh((2, 4))
+    M.make_mesh((2, 4, 4))
+    assert calls == [((2, 4), ("data", "model")),
+                     ((2, 4, 4), ("pod", "data", "model"))]
+
+
+def test_production_mesh_shapes(monkeypatch):
+    """Single-pod vs multi-pod production topologies (the 512-chip mesh
+    cannot be constructed on the test host, so record the _mk request)."""
+    import repro.launch.mesh as M
+    calls = []
+    monkeypatch.setattr(M, "_mk", lambda shape, axes: calls.append(
+        (shape, axes)))
+    M.make_production_mesh()
+    M.make_production_mesh(multi_pod=True)
+    assert calls == [((16, 16), ("data", "model")),
+                     ((2, 16, 16), ("pod", "data", "model"))]
+
+
+def test_dp_helpers_on_multi_pod_mesh():
+    """dp_axes/dp_size/tp_axis only read axis_names + shape, so the 2-pod
+    512-chip topology is testable with a stand-in."""
+    from repro.launch.mesh import dp_axes, dp_size, tp_axis
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert dp_axes(FakeMesh) == ("pod", "data")
+    assert dp_size(FakeMesh) == 32
+    assert tp_axis(FakeMesh) == "model"
+
+
+def test_split_minibatches_mesh_resident():
+    from repro.core.capture import capture_minibatch, split_minibatches
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh()
+    mb = capture_minibatch(mesh)
+    assert mb >= 4 and mb >= len(jax.devices())
+    x = np.arange(6 * 2 * 4, dtype=np.float32).reshape(6, 2, 4)
+    parts = split_minibatches(x, 4, mesh)
+    assert [p.shape[0] for p in parts] == [4, 2]
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p) for p in parts], 0), x)
+    # every part lives on the mesh (sharded when divisible, else replicated)
+    for p in parts:
+        assert set(p.sharding.mesh.devices.flat) == set(mesh.devices.flat)
 
 
 def test_resolve_spec_divisibility_fallback():
