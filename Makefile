@@ -2,7 +2,8 @@ PY      ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow test-multidevice lint bench-smoke bench
+.PHONY: test test-slow test-multidevice lint bench-smoke bench \
+	bench-serve bench-serve-smoke eval eval-smoke
 
 # tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
 test:
@@ -27,6 +28,24 @@ lint:
 # BENCH_recon.json (the CI perf trajectory artifact)
 bench-smoke:
 	$(PY) -m benchmarks.recon_speed --dryrun
+
+# serving-path speed bench (Table 8 axis): FP baseline + packed W2/W3/W4
+# under both kernel backends, with a cross-backend logits parity gate;
+# emits BENCH_serve.json (the CI serving-perf trajectory artifact)
+bench-serve:
+	$(PY) -m benchmarks.serve_speed
+
+bench-serve-smoke:
+	$(PY) -m benchmarks.serve_speed --smoke
+
+# one-command quality harness: FP vs RTN/AWQ/TesseraQ perplexity + choice
+# accuracy + packed-model eval + xla/pallas logits-parity gate; emits
+# EVAL.json
+eval:
+	$(PY) -m repro.eval.harness --reduced
+
+eval-smoke:
+	$(PY) -m repro.eval.harness --smoke
 
 # full benchmark suite (paper tables) + the recon engine speed report
 bench:

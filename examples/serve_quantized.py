@@ -1,6 +1,8 @@
 """End-to-end serving driver (the paper's deployment scenario, Table 8):
 TesseraQ-quantize a model, pack it, and serve a batch of requests with
-prefill + step-wise decode over a shared KV cache.
+prefill + step-wise decode over a shared KV cache, through the fused
+Pallas dequant-matmul backend (swap ``--backend xla`` for the unpack
+path, or ``--method none`` for the FP baseline).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -12,6 +14,7 @@ if __name__ == "__main__":
     sys.exit(main([
         "--arch", "tinyllama-1.1b", "--reduced",
         "--quant", "W4A16g32", "--method", "tesseraq", "--init", "awq",
+        "--backend", "pallas",
         "--requests", "8", "--prompt-len", "32", "--gen", "16",
         "--par-iters", "3", "--par-steps", "15",
     ]))

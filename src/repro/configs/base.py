@@ -18,6 +18,9 @@ class QuantConfig:
     ``bits`` / ``group_size`` control weight quantization; ``act_bits`` enables
     per-token dynamic activation quantization (W4A4/W4A8 style).
     ``group_size=None`` means per-(output)-channel over the full input dim.
+    ``kernel_backend`` selects how QTensor matmuls execute when serving the
+    packed model: "xla" (unpack + dense matmul) or "pallas" (fused
+    dequant-matmul kernel, interpret-mode off-TPU).
     """
     bits: int = 4
     group_size: Optional[int] = 128
@@ -26,6 +29,7 @@ class QuantConfig:
     act_symmetric: bool = True
     gamma: float = 1.0                      # clipping range multipliers (Eq. 1)
     beta: float = 1.0
+    kernel_backend: str = "xla"             # "xla" | "pallas" QTensor dispatch
 
     @property
     def qmax(self) -> int:

@@ -122,13 +122,13 @@ def capture_block_inputs(apply: Callable, bp, xs, auxs=None, *,
         if p is not None:
             stats[p].update(np.asarray(x), want_hessian)
 
-    def patched_mm(x, w):
+    def patched_mm(x, w, backend=None):
         rec(w, x)
-        return orig_mm(x, w)
+        return orig_mm(x, w, backend)
 
-    def patched_emm(a, w):
+    def patched_emm(a, w, backend=None):
         rec(w, a)
-        return orig_emm(a, w)
+        return orig_emm(a, w, backend)
 
     L.matmul, L.expert_matmul = patched_mm, patched_emm
     try:

@@ -68,9 +68,16 @@ class QTensor:
         return len(self.shape)
 
     def memory_bytes(self) -> int:
-        """Deployed weight-memory (container bytes + metadata)."""
-        n = int(np.prod(self.shape))
-        meta = self.scale.size * 2 + self.zero.size * 2     # bf16 scale/zero
+        """Deployed weight-memory (container bytes + metadata).
+
+        Metadata is counted at the dtype actually stored — an f32
+        scale/zero pair really costs 4 bytes each in HBM, not the 2 a bf16
+        deployment would (at group_size=32 that is ~19% of a W2 artifact,
+        so pretending bf16 materially under-reports Table 8's WM column).
+        Leading batch dims (stacked layers / experts) are included."""
+        n = int(np.prod(self.packed.shape[:-2])) * int(np.prod(self.shape))
+        meta = (self.scale.size * self.scale.dtype.itemsize
+                + self.zero.size * self.zero.dtype.itemsize)
         return n * CONTAINER_BITS[self.bits] // 8 + meta
 
     def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:

@@ -1,7 +1,8 @@
 """Perplexity + synthetic downstream evaluation (paper Sec. 4.1 metrics)."""
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -11,9 +12,19 @@ from repro.models import get_model
 from repro.models.common import DEFAULT_CTX
 
 
-def perplexity(cfg, params, batches: List[Dict], ctx=DEFAULT_CTX) -> float:
-    """exp(mean NLL) over token batches (the WikiText2-style metric)."""
+def _with_backend(ctx, backend: Optional[str]):
+    return ctx if backend is None else dataclasses.replace(
+        ctx, kernel_backend=backend)
+
+
+def perplexity(cfg, params, batches: List[Dict], ctx=DEFAULT_CTX,
+               backend: Optional[str] = None) -> float:
+    """exp(mean NLL) over token batches (the WikiText2-style metric).
+
+    ``backend`` overrides the QTensor matmul dispatch ("xla"/"pallas") when
+    evaluating a PACKED model; it is inert for plain/fake-quant params."""
     model = get_model(cfg)
+    ctx = _with_backend(ctx, backend)
     loss_fn = jax.jit(lambda p, b: model.loss_fn(p, b, ctx))
     tot, n = 0.0, 0
     for b in batches:
@@ -23,10 +34,12 @@ def perplexity(cfg, params, batches: List[Dict], ctx=DEFAULT_CTX) -> float:
     return float(np.exp(tot / max(n, 1)))
 
 
-def choice_accuracy(cfg, params, tasks: List[Dict], ctx=DEFAULT_CTX) -> float:
+def choice_accuracy(cfg, params, tasks: List[Dict], ctx=DEFAULT_CTX,
+                    backend: Optional[str] = None) -> float:
     """Synthetic zero-shot multiple-choice: score each candidate continuation
     by sequence log-likelihood, count argmax hits (PIQA/ARC-style protocol)."""
     model = get_model(cfg)
+    ctx = _with_backend(ctx, backend)
 
     @jax.jit
     def seq_logp(p, tokens):

@@ -12,7 +12,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import PACK_FACTOR, QTensor
 from repro.kernels import ref
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.quant_matmul import quant_matmul
@@ -32,13 +32,31 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
+def _pad_rows_to(x, target, axis=0):
+    """Zero-pad ``axis`` up to exactly ``target`` entries."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    assert cur < target, (cur, target)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "group_size",
                                              "block_m", "block_n", "block_k"))
 def quant_matmul_op(x, packed, scale, zero, *, bits: int, group_size: int,
                     block_m=256, block_n=256, block_k=512):
-    """Shape-gluing wrapper: pads M/N to tile multiples, trims after."""
+    """Shape-gluing wrapper: pads M/N/K to tile multiples, trims after.
+
+    K padding covers EVERY K-keyed operand consistently: x columns, packed
+    rows (K // pack_factor) and scale/zero rows (K // group_size) all grow
+    to the same padded K.  The padded region is harmless — x is zero there,
+    so whatever the zero bytes dequantize to is multiplied away.
+    """
     M, K = x.shape
     N = packed.shape[1]
+    ppb = PACK_FACTOR[bits]
     bm = min(block_m, max(8, M))
     bn = min(block_n, N)
     bk = min(block_k, K)
@@ -48,9 +66,19 @@ def quant_matmul_op(x, packed, scale, zero, *, bits: int, group_size: int,
         # otherwise to a divisor of the (larger) group
         bk = ((bk // group_size) * group_size if bk > group_size
               else math.gcd(bk, group_size))
-    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
-    out = quant_matmul(xp, _pad_to(packed, bn, 1),
-                       _pad_to(scale, bn, 1), _pad_to(zero, bn, 1),
+    # after the snap one of (bk, group_size) divides the other, so their
+    # max is their lcm: pad K to it and both the tile grid and the group
+    # rows stay aligned
+    align = max(bk, group_size)
+    Kp = K + (-K) % align
+    if Kp % ppb:
+        raise ValueError(f"padded K={Kp} not divisible by the bit-packing "
+                         f"factor {ppb} (bits={bits})")
+    xp = _pad_to(_pad_rows_to(x, Kp, axis=1), bm, 0)
+    out = quant_matmul(xp,
+                       _pad_to(_pad_rows_to(packed, Kp // ppb), bn, 1),
+                       _pad_to(_pad_rows_to(scale, Kp // group_size), bn, 1),
+                       _pad_to(_pad_rows_to(zero, Kp // group_size), bn, 1),
                        bits=bits, group_size=group_size,
                        block_m=bm, block_n=bn, block_k=bk,
                        interpret=_interpret())
@@ -69,6 +97,27 @@ def qtensor_matmul(x: jax.Array, w: QTensor) -> jax.Array:
     return out.reshape(*lead, w.out_features)
 
 
+def qtensor_expert_matmul(a: jax.Array, w: QTensor) -> jax.Array:
+    """Batched per-expert matmul (E, C, K) x expert-stacked QTensor
+    -> (E, C, N) through the fused Pallas kernel.
+
+    The expert dim is static, so it unrolls into one fused dequant-matmul
+    per expert — each expert's packed weight tile is DMA'd once, mirroring
+    how the serving MoE path touches expert weights."""
+    if w.act_scale is not None:
+        a = a / w.act_scale.astype(a.dtype)
+    if a.ndim != 3 or w.packed.ndim != 3:
+        raise ValueError(
+            f"expected (E, C, K) activations against expert-stacked QTensor, "
+            f"got a.ndim={a.ndim}, packed.ndim={w.packed.ndim}")
+    outs = [quant_matmul_op(a[e], w.packed[e],
+                            w.scale[e].astype(jnp.float32),
+                            w.zero[e].astype(jnp.float32),
+                            bits=w.bits, group_size=w.group_size)
+            for e in range(a.shape[0])]
+    return jnp.stack(outs)
+
+
 @functools.partial(jax.jit, static_argnames=("out_dtype",))
 def int8_matmul_op(x_q, w_q, x_scale, w_scale, out_dtype=jnp.bfloat16):
     return int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=out_dtype,
@@ -76,24 +125,37 @@ def int8_matmul_op(x_q, w_q, x_scale, w_scale, out_dtype=jnp.bfloat16):
 
 
 def w4a8_matmul(x: jax.Array, w: QTensor, act_bits: int = 8) -> jax.Array:
-    """Dynamic per-token activation quant + integer matmul against a
-    per-channel (group_size == K) QTensor.
+    """Dynamic per-token activation quant + integer matmul against a QTensor.
 
     Asymmetric weights are recentered by 128 (exact in int8); the zero-point
     contribution is restored with the standard rank-1 correction
-    ``rowsum(x_q) x (128 - zero)`` in the fp32 epilogue."""
+    ``rowsum(x_q) x (128 - zero)`` in the fp32 epilogue.  Per-channel
+    weights (group_size == K) take one integer matmul; grouped weights
+    accumulate one integer matmul + rank-1 correction PER GROUP (the scale
+    changes along K, so the epilogue cannot be hoisted) — correct but
+    ``K // group_size`` kernel launches, so per-channel is the fast path."""
+    if w.packed.ndim != 2:
+        raise ValueError("w4a8_matmul expects a single (non-stacked) QTensor, "
+                         f"got packed.ndim={w.packed.ndim}")
     x_q, x_scale = ref.quantize_per_token_ref(x.reshape(-1, x.shape[-1]),
                                               act_bits)
     from repro.core.qtensor import unpack
-    K = w.in_features
+    K, g = w.in_features, w.group_size
     codes = unpack(w.packed, w.bits, K, axis=-2).astype(jnp.int32)
     w_centered = (codes - 128).astype(jnp.int8)
-    w_scale = w.scale.astype(jnp.float32)[0:1, :]
-    out = int8_matmul_op(x_q, w_centered, x_scale, w_scale)
-    zero = w.zero.astype(jnp.float32)[0:1, :]
-    rowsum = jnp.sum(x_q.astype(jnp.float32), axis=-1, keepdims=True)
-    corr = (rowsum * x_scale) * ((128.0 - zero) * w_scale)
-    out = out.astype(jnp.float32) + corr
+    scale = w.scale.astype(jnp.float32)                 # (K // g, N)
+    zero = w.zero.astype(jnp.float32)
+    x_q_f = x_q.astype(jnp.float32)
+    out = jnp.zeros((x_q.shape[0], w.out_features), jnp.float32)
+    for gi in range(K // g):
+        sl = slice(gi * g, (gi + 1) * g)
+        part = int8_matmul_op(x_q[:, sl], w_centered[sl],
+                              x_scale, scale[gi:gi + 1],
+                              out_dtype=jnp.float32)
+        rowsum = jnp.sum(x_q_f[:, sl], axis=-1, keepdims=True)
+        corr = (rowsum * x_scale) * ((128.0 - zero[gi:gi + 1])
+                                     * scale[gi:gi + 1])
+        out = out + part + corr
     return out.astype(x.dtype).reshape(*x.shape[:-1], w.out_features)
 
 

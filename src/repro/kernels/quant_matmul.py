@@ -75,6 +75,18 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
     M, K = x.shape
     ppb = PACK_FACTOR[bits]
     N = packed.shape[1]
+    if packed.shape[0] != K // ppb or K % ppb:
+        raise ValueError(
+            f"packed rows {packed.shape[0]} inconsistent with K={K} at "
+            f"{bits} bits (expected K/{ppb}={K // ppb}) — pad every K-keyed "
+            "operand together (see ops.quant_matmul_op)")
+    if K % group_size or scale.shape[0] != K // group_size \
+            or zero.shape[0] != K // group_size:
+        raise ValueError(
+            f"scale/zero rows {scale.shape[0]}/{zero.shape[0]} inconsistent "
+            f"with K={K}, group_size={group_size} (expected "
+            f"{max(K // group_size, 1)} whole groups) — pad every K-keyed "
+            "operand together (see ops.quant_matmul_op)")
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     if bk % group_size == 0:

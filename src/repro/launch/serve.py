@@ -4,6 +4,11 @@ packed weights — the paper's deployment scenario (Table 8).
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --quant W4A16g32 --requests 8 --prompt-len 32 --gen 16
 
+``--method none`` skips quantization entirely and serves the plain FP
+params (the fp16 baseline every Table 8 comparison is against);
+``--backend pallas`` routes every QTensor matmul through the fused Pallas
+dequant-matmul kernel instead of the XLA unpack path.
+
 Implements continuous batched decode over a shared KV cache: all requests
 prefill together (ragged lengths via per-request positions), then decode
 step-by-step; finished requests are masked out.
@@ -11,6 +16,7 @@ step-by-step; finished requests are masked out.
 from __future__ import annotations
 
 import argparse
+import re
 import sys
 import time
 
@@ -21,18 +27,120 @@ import numpy as np
 from repro.configs import get_config, get_reduced_config
 from repro.configs.base import QuantConfig
 from repro.core import pack_model, quantize_model, quantized_memory_report
+from repro.core.qtensor import PACK_FACTOR
 from repro.core.tesseraq import TesseraQConfig
 from repro.data.pipeline import DataConfig, SyntheticCorpus, calibration_batches
 from repro.launch.steps import make_serve_steps
 from repro.models import get_model
 
+_QUANT_RE = re.compile(r"W(\d+)A(\d+)(?:g(\d+))?$")
 
-def parse_quant(tag: str):
-    import re
-    m = re.match(r"W(\d+)A(\d+)(?:g(\d+))?$", tag)
+
+def parse_quant(tag: str, kernel_backend: str = "xla") -> QuantConfig:
+    """Parse a ``W<bits>A<act_bits>[g<group>]`` tag (e.g. ``W4A16g32``).
+
+    Raises a descriptive ``ValueError`` on malformed tags instead of the
+    bare ``AttributeError`` a failed regex match used to surface."""
+    m = _QUANT_RE.match(tag)
+    if m is None:
+        raise ValueError(
+            f"malformed quant tag {tag!r}: expected W<bits>A<act_bits>"
+            f"[g<group>] with uppercase W/A, e.g. W4A16g32 or W2A16 "
+            f"(per-channel)")
     bits, act, g = int(m.group(1)), int(m.group(2)), m.group(3)
+    if bits not in PACK_FACTOR:
+        raise ValueError(f"unsupported weight bits {bits} in {tag!r}: "
+                         f"packing supports {sorted(PACK_FACTOR)}")
+    if g is not None and int(g) <= 0:
+        raise ValueError(f"group size must be a positive integer, got "
+                         f"g{g} in {tag!r} (omit g for per-channel)")
     return QuantConfig(bits=bits, group_size=int(g) if g else None,
-                       act_bits=None if act >= 16 else act)
+                       act_bits=None if act >= 16 else act,
+                       kernel_backend=kernel_backend)
+
+
+def build_params(cfg, params, qcfg: QuantConfig, data_cfg: DataConfig, *,
+                 method: str, init: str, tcfg: TesseraQConfig,
+                 calib_samples: int, verbose: bool = True):
+    """Calibrate + pack, or pass FP params through for ``method="none"``.
+
+    Returns (params_or_packed, memory_report_or_None)."""
+    if method == "none":
+        if verbose:
+            print(f"[serve] serving FP {cfg.name} (no quantization)")
+        return params, None
+    if verbose:
+        print(f"[serve] calibrating {cfg.name} to {qcfg.tag()} "
+              f"with {method}+{init} ...")
+    t0 = time.time()
+    calib = calibration_batches(data_cfg, 2, max(2, calib_samples // 2))
+    calib = [{"tokens": jnp.asarray(b["tokens"][:, :-1])} for b in calib]
+    params_fq, qmeta, _ = quantize_model(cfg, params, calib, qcfg,
+                                         method=method, init=init, tcfg=tcfg)
+    packed = pack_model(cfg, params_fq, qmeta, qcfg)
+    report = quantized_memory_report(packed)
+    if verbose:
+        print(f"[serve] calibration done in {time.time()-t0:.1f}s; {report}")
+    return packed, report
+
+
+def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None):
+    """Jit-wrap the prefill/decode steps ONCE for a (backend, act_bits)
+    serving configuration.  Benchmarks must reuse the returned pair across
+    timed repeats — re-wrapping per call would retrace and recompile, and
+    the timings would measure XLA, not serving."""
+    _, prefill_step, decode_step = make_serve_steps(
+        cfg, None, act_bits=act_bits, kernel_backend=kernel_backend)
+    return jax.jit(prefill_step), jax.jit(decode_step, donate_argnums=(1,))
+
+
+def serve_requests(cfg, model, params, prompts, *, gen: int,
+                   kernel_backend=None, act_bits=None, compiled=None,
+                   collect_logits=True) -> dict:
+    """Prefill + step-wise continuous-batched decode.
+
+    Returns {"tokens", "prefill_secs", "decode_secs", "prefill_tok_s",
+    "decode_tok_s", "logits"} — logits is the (B, V) prefill output plus
+    each decode step's, so callers can gate backend parity on them
+    (``collect_logits=False`` drops them for timing-only runs).
+    ``compiled``: a ``compile_serve_steps`` pair to reuse (built fresh
+    otherwise).  Device->host transfers happen OUTSIDE the timed loop —
+    the decode section times async step dispatch plus one final sync."""
+    B, prompt_len = prompts.shape
+    max_seq = prompt_len + gen
+    pstep, dstep = compiled if compiled is not None else compile_serve_steps(
+        cfg, kernel_backend=kernel_backend, act_bits=act_bits)
+
+    cache = model.init_cache(B, max_seq)
+    t0 = time.time()
+    logits, cache = pstep(params, {"tokens": jnp.asarray(prompts)}, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    all_logits = [logits] if collect_logits else None
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((B,), prompt_len, jnp.int32)
+    toks = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, cache = dstep(params, cache, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+        toks.append(tok)
+        if collect_logits:
+            all_logits.append(logits)
+    tok.block_until_ready()
+    t_decode = time.time() - t0
+    return {
+        "tokens": np.stack([np.asarray(t) for t in toks], 1),
+        "logits": (np.stack([np.asarray(a, np.float32) for a in all_logits],
+                            1) if collect_logits else None),   # (B, gen, V)
+        "prefill_secs": t_prefill,
+        "decode_secs": t_decode,
+        "prefill_tok_s": B * prompt_len / max(t_prefill, 1e-9),
+        "decode_tok_s": (B * (gen - 1) / max(t_decode, 1e-9)
+                         if gen > 1 else 0.0),
+    }
 
 
 def main(argv=None):
@@ -43,6 +151,8 @@ def main(argv=None):
     ap.add_argument("--method", default="tesseraq",
                     choices=["tesseraq", "omniquant", "none"])
     ap.add_argument("--init", default="awq", choices=["awq", "rtn", "gptq"])
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"],
+                    help="QTensor matmul dispatch for the serve steps")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -57,56 +167,32 @@ def main(argv=None):
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
-    qcfg = parse_quant(args.quant)
+    qcfg = parse_quant(args.quant, kernel_backend=args.backend)
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                           global_batch=args.requests, seed=args.seed)
-
-    if args.method != "none" or True:
-        print(f"[serve] calibrating {cfg.name} to {qcfg.tag()} "
-              f"with {args.method}+{args.init} ...")
-        t0 = time.time()
-        calib = calibration_batches(data_cfg, 2, max(2, args.calib_samples // 2))
-        calib = [{"tokens": jnp.asarray(b["tokens"][:, :-1])} for b in calib]
-        tcfg = TesseraQConfig(par_iterations=args.par_iters,
-                              steps_per_iteration=args.par_steps)
-        params_fq, qmeta, report = quantize_model(
-            cfg, params, calib, qcfg,
-            method=args.method if args.method != "none" else "none",
-            init=args.init, tcfg=tcfg)
-        packed = pack_model(cfg, params_fq, qmeta, qcfg)
-        print(f"[serve] calibration done in {time.time()-t0:.1f}s; "
-              f"{quantized_memory_report(packed)}")
-    else:
-        packed = params
+    tcfg = TesseraQConfig(par_iterations=args.par_iters,
+                          steps_per_iteration=args.par_steps)
+    served, _ = build_params(cfg, params, qcfg, data_cfg, method=args.method,
+                             init=args.init, tcfg=tcfg,
+                             calib_samples=args.calib_samples)
 
     # ---- batched serving ----------------------------------------------------
     corpus = SyntheticCorpus(data_cfg)
     prompts = corpus.batch(0)["tokens"][:, :args.prompt_len]
-    B = args.requests
-    max_seq = args.prompt_len + args.gen
-    _, prefill_step, decode_step = make_serve_steps(
-        cfg, None, act_bits=qcfg.act_bits)
-
-    cache = model.init_cache(B, max_seq)
-    t0 = time.time()
-    logits, cache = jax.jit(prefill_step)(
-        packed, {"tokens": jnp.asarray(prompts)}, cache)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    pos = jnp.full((B,), args.prompt_len, jnp.int32)
-    outs = [np.asarray(tok)]
-    dstep = jax.jit(decode_step, donate_argnums=(1,))
-    for _ in range(args.gen - 1):
-        logits, cache = dstep(packed, cache, tok, pos)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        pos = pos + 1
-        outs.append(np.asarray(tok))
-    dt = time.time() - t0
-    gen = np.stack(outs, 1)
-    print(f"[serve] {B} requests x {args.gen} tokens in {dt:.2f}s "
-          f"({B*args.gen/dt:.1f} tok/s, CPU simulation)")
+    stats = serve_requests(cfg, model, served, prompts, gen=args.gen,
+                           kernel_backend=qcfg.kernel_backend,
+                           act_bits=qcfg.act_bits if args.method != "none"
+                           else None)
+    B, gen = args.requests, args.gen
+    dt = stats["prefill_secs"] + stats["decode_secs"]
+    print(f"[serve] {B} requests x {gen} tokens in {dt:.2f}s "
+          f"(prefill {stats['prefill_tok_s']:.1f} tok/s, decode "
+          f"{stats['decode_tok_s']:.1f} tok/s, backend={args.backend}, "
+          f"CPU simulation)")
     print("[serve] sample generations (token ids):")
     for b in range(min(B, 4)):
-        print(f"  req{b}: {prompts[b][-8:].tolist()} -> {gen[b][:12].tolist()}")
+        print(f"  req{b}: {prompts[b][-8:].tolist()} -> "
+              f"{stats['tokens'][b][:12].tolist()}")
     return 0
 
 

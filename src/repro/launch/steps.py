@@ -24,17 +24,20 @@ from repro.optim.compression import compress_decompress, init_error
 
 
 def make_ctx(cfg: ModelConfig, mesh=None, *, act_bits=None, decode=False,
-             attn_chunk=512, remat=None, shard_overrides=None) -> Ctx:
+             attn_chunk=512, remat=None, shard_overrides=None,
+             kernel_backend=None) -> Ctx:
     # (shard_overrides: logical-axis remaps, e.g. {"seq": ("model",)} for
     # attention sequence parallelism — the worst-fraction hillclimb knob)
     if mesh is None:
         return Ctx(act_bits=act_bits, attn_chunk=attn_chunk,
-                   remat=cfg.remat if remat is None else remat, decode=decode)
+                   remat=cfg.remat if remat is None else remat, decode=decode,
+                   kernel_backend=kernel_backend)
     ep = tp_axis(mesh) if cfg.family == "moe" else None
     return Ctx(shard=make_sharder(mesh, shard_overrides), mesh=mesh, ep_axis=ep,
                dp_axes=dp_axes(mesh), act_bits=act_bits,
                attn_chunk=attn_chunk,
-               remat=cfg.remat if remat is None else remat, decode=decode)
+               remat=cfg.remat if remat is None else remat, decode=decode,
+               kernel_backend=kernel_backend)
 
 
 # --------------------------------------------------------------------------
@@ -183,17 +186,22 @@ def quantize_param_struct(params_struct, cfg: ModelConfig, qcfg: QuantConfig):
 
 def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
                      attn_chunk: int = 512, extra_overrides=None,
-                     kv_bits=None):
+                     kv_bits=None, kernel_backend=None):
+    """``kernel_backend`` ("xla" | "pallas" | None = env/default) selects the
+    QTensor matmul path for BOTH the prefill and decode steps — this is the
+    explicit per-run dispatch the serving launcher and benchmarks use."""
     model = get_model(cfg)
     import dataclasses as _dc
     ctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
-                   remat=False, shard_overrides=extra_overrides)
+                   remat=False, shard_overrides=extra_overrides,
+                   kernel_backend=kernel_backend)
     ctx = _dc.replace(ctx, kv_bits=kv_bits)
     # decode: Sq == 1, so run attention un-chunked (single scan trip) — the
     # score row is tiny and GSPMD can then partition the softmax reduction
     # over a sequence-sharded KV cache (GQA kv_heads < TP case)
     dctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=1 << 30,
-                    remat=False, decode=True, shard_overrides=extra_overrides)
+                    remat=False, decode=True, shard_overrides=extra_overrides,
+                    kernel_backend=kernel_backend)
     dctx = _dc.replace(dctx, kv_bits=kv_bits)
 
     def prefill_step(params, batch, cache):

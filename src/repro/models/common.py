@@ -20,12 +20,19 @@ class Ctx:
     running un-meshed); ``ep_axis`` names the mesh axis experts are sharded
     over (None = single-device local MoE); ``act_bits`` turns on per-token
     activation fake-quant in inference paths (W4A4 etc.).
+
+    ``kernel_backend`` is the per-call QTensor matmul dispatch: "xla"
+    (unpack + dense matmul) or "pallas" (fused dequant-matmul kernel).
+    ``None`` falls back to the ``REPRO_KERNEL_BACKEND`` env var (read fresh
+    at trace time, never cached) and then to "xla" — explicit plumbing via
+    ``QuantConfig.kernel_backend`` is the supported path.
     """
     shard: Callable = _identity_shard
     mesh: Any = None
     ep_axis: Optional[str] = None
     dp_axes: tuple = ()            # mesh axes the batch/token dim is sharded over
     act_bits: Optional[int] = None
+    kernel_backend: Optional[str] = None   # "xla" | "pallas" | None (env/default)
     # int8 KV cache (beyond-paper, §Perf A4): static-scale symmetric
     # quantization of cache entries; scale calibrated offline (default is a
     # conservative bound for post-RoPE keys/values at unit-variance init)

@@ -66,13 +66,16 @@ def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
           cache_pos=None, kv_len=None, precomputed_kv=None):
     B, S, d = x.shape
     hd = cfg.resolved_head_dim
-    q = L.matmul(x, ap["wq"]).reshape(B, S, cfg.num_heads, hd)
+    kb = ctx.kernel_backend
+    q = L.matmul(x, ap["wq"], kb).reshape(B, S, cfg.num_heads, hd)
     if precomputed_kv is not None:
         k, v = precomputed_kv
         new_kv = None
     else:
-        k = L.matmul(kv_src, ap["wk"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, hd)
-        v = L.matmul(kv_src, ap["wv"]).reshape(B, kv_src.shape[1], cfg.num_kv_heads, hd)
+        k = L.matmul(kv_src, ap["wk"], kb).reshape(
+            B, kv_src.shape[1], cfg.num_kv_heads, hd)
+        v = L.matmul(kv_src, ap["wv"], kb).reshape(
+            B, kv_src.shape[1], cfg.num_kv_heads, hd)
         new_kv = None
         if kv_cache is not None:
             ck, cv = update_cache(kv_cache["k"], kv_cache["v"], k, v, cache_pos)
@@ -81,14 +84,16 @@ def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
     o = L.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
                           kv_len=kv_len, chunk=ctx.attn_chunk)
     o = o.reshape(B, S, cfg.num_heads * hd)
-    return L.matmul(o, ap["wo"]), new_kv
+    return L.matmul(o, ap["wo"], kb), new_kv
 
 
 def _mlp(bp, x, cfg, ctx):
     h = L.layer_norm(x, bp["ln_m"], jnp.zeros_like(bp["ln_m"]), cfg.norm_eps)
     if ctx.act_bits:
         h = L.fake_quant_act(h, ctx.act_bits)
-    return L.matmul(jax.nn.gelu(L.matmul(h, bp["w_up"])), bp["w_down"])
+    kb = ctx.kernel_backend
+    return L.matmul(jax.nn.gelu(L.matmul(h, bp["w_up"], kb)),
+                    bp["w_down"], kb)
 
 
 def encoder_block(bp, x, cfg, ctx):
@@ -148,7 +153,7 @@ def forward(params, cfg: ModelConfig, frames, tokens, ctx: Ctx = DEFAULT_CTX):
                       cfg.unroll_layers)
     x = L.layer_norm(x, params["ln_f"], jnp.zeros_like(params["ln_f"]),
                      cfg.norm_eps)
-    return L.matmul(x, params["head"])
+    return L.matmul(x, params["head"], ctx.kernel_backend)
 
 
 def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
@@ -185,8 +190,11 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
 
     def step(h, layer):
         bp, sk, sv = layer
-        ck = L.matmul(enc, bp["xattn"]["wk"]).reshape(B, -1, cfg.num_kv_heads, hd)
-        cv = L.matmul(enc, bp["xattn"]["wv"]).reshape(B, -1, cfg.num_kv_heads, hd)
+        kb = ctx.kernel_backend
+        ck = L.matmul(enc, bp["xattn"]["wk"], kb).reshape(
+            B, -1, cfg.num_kv_heads, hd)
+        cv = L.matmul(enc, bp["xattn"]["wv"], kb).reshape(
+            B, -1, cfg.num_kv_heads, hd)
         h, new_self = decoder_block(bp, h, enc, cfg, ctx,
                                     self_kv={"k": sk, "v": sv},
                                     cache_pos=pos0, cross_kv=(ck, cv))
@@ -200,7 +208,7 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
                  "cross_v": cv.astype(cache["cross_v"].dtype)}
     x = L.layer_norm(x[:, -1:], params["ln_f"], jnp.zeros_like(params["ln_f"]),
                      cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
@@ -224,4 +232,4 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
     new_cache = dict(cache, self_k=nk, self_v=nv)
     x = L.layer_norm(x, params["ln_f"], jnp.zeros_like(params["ln_f"]),
                      cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache

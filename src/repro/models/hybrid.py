@@ -72,7 +72,7 @@ def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX):
         if attn_after:
             x, _ = _shared_block(params, x, cfg, ctx, positions=positions)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])
+    return L.matmul(x, params["head"], ctx.kernel_backend)
 
 
 def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
@@ -136,7 +136,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=jnp.arange(S),
                         cache_pos=pos0, kv_len=None, decode=False)
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
@@ -146,4 +146,4 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=pos[:, None],
                         cache_pos=pos, kv_len=pos + 1, decode=True)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache

@@ -4,6 +4,10 @@ fake-quant.
 
 All modules are pure functions over param dicts; weights use the convention
 ``(in_features, out_features)`` (experts: ``(E, in, out)``).
+
+QTensor matmuls dispatch per call on an explicit ``backend`` argument
+(plumbed from ``Ctx.kernel_backend`` by every model family): "xla" unpacks
+and runs a dense matmul, "pallas" runs the fused dequant-matmul kernel.
 """
 from __future__ import annotations
 
@@ -20,31 +24,40 @@ from repro.core.qtensor import QTensor, qmatmul
 # matmul dispatch (the single entry point the quantizer swaps weights under)
 # --------------------------------------------------------------------------
 
-_KERNEL_BACKEND = None
+KERNEL_BACKENDS = ("xla", "pallas")
 
 
-def _use_pallas() -> bool:
-    """Backend switch for QTensor matmuls: REPRO_KERNEL_BACKEND=pallas routes
-    through the fused Pallas dequant-matmul (interpret-mode on CPU)."""
-    global _KERNEL_BACKEND
-    if _KERNEL_BACKEND is None:
+def resolve_backend(backend: Optional[str]) -> str:
+    """Resolve the QTensor matmul backend for ONE dispatch.
+
+    ``backend`` comes from the caller (``Ctx.kernel_backend``, plumbed from
+    ``QuantConfig.kernel_backend``); ``None`` falls back to the
+    ``REPRO_KERNEL_BACKEND`` env var — read fresh at trace time, never cached
+    in module state — and then to "xla"."""
+    if backend is None:
         import os
-        _KERNEL_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
-    return _KERNEL_BACKEND == "pallas"
+        backend = os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+    if backend not in KERNEL_BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {KERNEL_BACKENDS}")
+    return backend
 
 
-def matmul(x: jax.Array, w) -> jax.Array:
+def matmul(x: jax.Array, w, backend: Optional[str] = None) -> jax.Array:
     if isinstance(w, QTensor):
-        if _use_pallas():
+        if resolve_backend(backend) == "pallas":
             from repro.kernels.ops import qtensor_matmul
             return qtensor_matmul(x, w)
         return qmatmul(x, w)
     return x @ w
 
 
-def expert_matmul(a: jax.Array, w) -> jax.Array:
+def expert_matmul(a: jax.Array, w, backend: Optional[str] = None) -> jax.Array:
     """Batched per-expert matmul: (E, C, d) x (E, d, f) -> (E, C, f)."""
     if isinstance(w, QTensor):
+        if resolve_backend(backend) == "pallas":
+            from repro.kernels.ops import qtensor_expert_matmul
+            return qtensor_expert_matmul(a, w)
         if w.act_scale is not None:
             a = a / w.act_scale.astype(a.dtype)
         w = w.dequantize(a.dtype)
@@ -272,9 +285,3 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
     scale = scale if scale is not None else in_dim ** -0.5
     return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
-
-
-def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
-    g = matmul(x, w_gate)
-    u = matmul(x, w_up)
-    return matmul(jax.nn.silu(g) * u, w_down)

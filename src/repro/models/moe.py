@@ -57,7 +57,8 @@ def _capacity(tokens: int, num_experts: int, top_k: int, cf: float) -> int:
 
 
 def _expert_compute(x2d, idx, gate, w_gate, w_up, w_down, *,
-                    e_start: int, e_local: int, capacity: int, act_bits):
+                    e_start: int, e_local: int, capacity: int, act_bits,
+                    backend=None):
     """Capacity-gather tokens for experts [e_start, e_start+e_local), run the
     batched FFN, and scatter-combine.  Pure function used by both EP paths.
 
@@ -82,10 +83,11 @@ def _expert_compute(x2d, idx, gate, w_gate, w_up, w_down, *,
     if act_bits:
         h = L.fake_quant_act(h, act_bits)
 
-    g = jax.nn.silu(L.expert_matmul(h, w_gate)) * L.expert_matmul(h, w_up)
+    g = (jax.nn.silu(L.expert_matmul(h, w_gate, backend))
+         * L.expert_matmul(h, w_up, backend))
     if act_bits:
         g = L.fake_quant_act(g, act_bits)
-    out = L.expert_matmul(g, w_down)                            # (E_l, C, d)
+    out = L.expert_matmul(g, w_down, backend)                   # (E_l, C, d)
 
     out_flat = jnp.concatenate(
         [out.reshape(e_local * capacity, d), jnp.zeros((1, d), out.dtype)], 0)
@@ -106,7 +108,8 @@ def moe_ffn(mp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
         cap = _capacity(B * S, e, k, cfg.moe.capacity_factor)
         y = _expert_compute(x2d, idx, gate, mp["w_gate"], mp["w_up"],
                             mp["w_down"], e_start=0, e_local=e, capacity=cap,
-                            act_bits=ctx.act_bits)
+                            act_bits=ctx.act_bits,
+                            backend=ctx.kernel_backend)
         return y.reshape(B, S, d)
 
     # ---- expert-parallel path: shard_map over the EP mesh axis -------------
@@ -125,7 +128,8 @@ def moe_ffn(mp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
         sid = jax.lax.axis_index(ax)
         y = _expert_compute(x2d, idx, gate, wg, wu, wd,
                             e_start=sid * e_local, e_local=e_local,
-                            capacity=cap, act_bits=ctx.act_bits)
+                            capacity=cap, act_bits=ctx.act_bits,
+                            backend=ctx.kernel_backend)
         return jax.lax.psum(y, ax)
 
     y = mesh_mod.shard_map_compat(

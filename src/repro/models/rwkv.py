@@ -92,10 +92,11 @@ def time_mix(bp, x, cfg: ModelConfig, ctx: Ctx, *, shift_state=None,
         mixed = [L.fake_quant_act(mix(i), ctx.act_bits) for i in range(5)]
     else:
         mixed = [mix(i) for i in range(5)]
-    r = L.matmul(mixed[0], bp["wr"]).reshape(B, S, H, Dh)
-    k = L.matmul(mixed[1], bp["wk"]).reshape(B, S, H, Dh)
-    v = L.matmul(mixed[2], bp["wv"]).reshape(B, S, H, Dh)
-    g = jax.nn.silu(L.matmul(mixed[3], bp["wg"]))
+    kb = ctx.kernel_backend
+    r = L.matmul(mixed[0], bp["wr"], kb).reshape(B, S, H, Dh)
+    k = L.matmul(mixed[1], bp["wk"], kb).reshape(B, S, H, Dh)
+    v = L.matmul(mixed[2], bp["wv"], kb).reshape(B, S, H, Dh)
+    g = jax.nn.silu(L.matmul(mixed[3], bp["wg"], kb))
     # data-dependent decay (per channel), clamped for stability
     lora = jnp.tanh(mixed[4].astype(jnp.float32) @ bp["wA"]) @ bp["wB"]
     log_decay = -jnp.exp(jnp.clip(bp["w0"][None, None, :] + lora, -10.0, 4.0))
@@ -115,7 +116,7 @@ def time_mix(bp, x, cfg: ModelConfig, ctx: Ctx, *, shift_state=None,
     yf = (yf - yf.mean(-1, keepdims=True)) * jax.lax.rsqrt(
         yf.var(-1, keepdims=True) + 64e-5)
     yf = yf.reshape(B, S, d).astype(x.dtype) * bp["gn"][None, None, :]
-    out = L.matmul(yf * g, bp["wo"])
+    out = L.matmul(yf * g, bp["wo"], kb)
     return out, x[:, -1:], new_state
 
 
@@ -127,9 +128,10 @@ def channel_mix(bp, x, cfg: ModelConfig, ctx: Ctx, *, shift_state=None):
     if ctx.act_bits:
         xk = L.fake_quant_act(xk, ctx.act_bits)
         xr = L.fake_quant_act(xr, ctx.act_bits)
-    k = jnp.square(jax.nn.relu(L.matmul(xk, bp["ck"])))
-    kv = L.matmul(k, bp["cv"])
-    return jax.nn.sigmoid(L.matmul(xr, bp["cr"])) * kv, x[:, -1:]
+    kb = ctx.kernel_backend
+    k = jnp.square(jax.nn.relu(L.matmul(xk, bp["ck"], kb)))
+    kv = L.matmul(k, bp["cv"], kb)
+    return jax.nn.sigmoid(L.matmul(xr, bp["cr"], kb)) * kv, x[:, -1:]
 
 
 def block(bp, x, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *, cache=None,
@@ -170,7 +172,7 @@ def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX):
     x, _ = layer_loop(maybe_remat(step, ctx), x, params["blocks"],
                       cfg.unroll_layers)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])
+    return L.matmul(x, params["head"], ctx.kernel_backend)
 
 
 def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
@@ -194,7 +196,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),
                               cfg.unroll_layers)
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos=None,
@@ -210,4 +212,4 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos=None,
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),
                               cfg.unroll_layers)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    return L.matmul(x, params["head"])[:, 0], new_cache
+    return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache

@@ -159,7 +159,8 @@ def _causal_conv(x, w, b):
     return out + b[None, None, :]
 
 
-def _mamba_inner(bp, x, cfg, *, conv_state=None, ssm_state=None, decode=False):
+def _mamba_inner(bp, x, cfg, *, conv_state=None, ssm_state=None,
+                 decode=False, backend=None):
     """Core of the mamba2 mixer after the input norm.
 
     x: (B,S,d). In decode mode S==1 and states are threaded; returns
@@ -173,7 +174,7 @@ def _mamba_inner(bp, x, cfg, *, conv_state=None, ssm_state=None, decode=False):
     Wc = cfg.ssm.conv_width
     B_, S, _ = x.shape
 
-    zxbcdt = L.matmul(x, bp["in_proj"])
+    zxbcdt = L.matmul(x, bp["in_proj"], backend)
     z, xin, Bs, Cs, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     conv_in = jnp.concatenate([xin, Bs, Cs], axis=-1).astype(jnp.float32)
@@ -211,7 +212,7 @@ def _mamba_inner(bp, x, cfg, *, conv_state=None, ssm_state=None, decode=False):
     y = y.reshape(B_, S, di).astype(x.dtype)
     y = L.rms_norm(y * jax.nn.silu(z).astype(x.dtype), bp["out_norm"],
                    cfg.norm_eps).astype(x.dtype)
-    out = L.matmul(y, bp["out_proj"])
+    out = L.matmul(y, bp["out_proj"], backend)
     return out, new_conv_state, new_ssm
 
 
@@ -222,7 +223,8 @@ def mamba_block(bp, x, cfg, ctx, *, conv_state=None, ssm_state=None,
     if ctx.act_bits:
         h = L.fake_quant_act(h, ctx.act_bits)
     out, ncs, nss = _mamba_inner(bp, h, cfg, conv_state=conv_state,
-                                 ssm_state=ssm_state, decode=decode)
+                                 ssm_state=ssm_state, decode=decode,
+                                 backend=ctx.kernel_backend)
     return x + out, ncs, nss
 
 

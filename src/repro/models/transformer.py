@@ -77,9 +77,10 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
     if ctx.act_bits:
         h = L.fake_quant_act(h, ctx.act_bits)
-    q = L.matmul(h, bp["wq"]).reshape(Bb, S, cfg.num_heads, hd)
-    k = L.matmul(h, bp["wk"]).reshape(Bb, S, cfg.num_kv_heads, hd)
-    v = L.matmul(h, bp["wv"]).reshape(Bb, S, cfg.num_kv_heads, hd)
+    kb = ctx.kernel_backend
+    q = L.matmul(h, bp["wq"], kb).reshape(Bb, S, cfg.num_heads, hd)
+    k = L.matmul(h, bp["wk"], kb).reshape(Bb, S, cfg.num_kv_heads, hd)
+    v = L.matmul(h, bp["wv"], kb).reshape(Bb, S, cfg.num_kv_heads, hd)
     if cfg.rope_theta:
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
@@ -116,7 +117,7 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     o = o.reshape(Bb, S, cfg.num_heads * hd)
     if ctx.act_bits:
         o = L.fake_quant_act(o, ctx.act_bits)
-    return L.matmul(o, bp["wo"]), new_kv
+    return L.matmul(o, bp["wo"], kb), new_kv
 
 
 def ffn(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
@@ -125,12 +126,13 @@ def ffn(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
         h = L.fake_quant_act(h, ctx.act_bits)
     if cfg.family == "moe":
         return moe_ffn(bp["moe"], h, cfg, ctx)
-    g = L.matmul(h, bp["w_gate"])
-    u = L.matmul(h, bp["w_up"])
+    kb = ctx.kernel_backend
+    g = L.matmul(h, bp["w_gate"], kb)
+    u = L.matmul(h, bp["w_up"], kb)
     a = jax.nn.silu(g) * u
     if ctx.act_bits:
         a = L.fake_quant_act(a, ctx.act_bits)
-    return L.matmul(a, bp["w_down"])
+    return L.matmul(a, bp["w_down"], kb)
 
 
 def block(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *,
@@ -156,10 +158,10 @@ def embed_tokens(params, cfg: ModelConfig, tokens) -> jax.Array:
     return e
 
 
-def unembed(params, cfg: ModelConfig, x) -> jax.Array:
+def unembed(params, cfg: ModelConfig, x, ctx: Ctx = DEFAULT_CTX) -> jax.Array:
     if cfg.tie_embeddings:
         return x @ params["embed"].T
-    return L.matmul(x, params["head"])
+    return L.matmul(x, params["head"], ctx.kernel_backend)
 
 
 def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX, *,
@@ -177,7 +179,7 @@ def forward(params, cfg: ModelConfig, tokens, ctx: Ctx = DEFAULT_CTX, *,
     x, _ = layer_loop(maybe_remat(step, ctx), x, params["blocks"],
                       cfg.unroll_layers)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = unembed(params, cfg, x)
+    logits = unembed(params, cfg, x, ctx)
     return ctx.shard(logits, ("batch", "seq", "vocab"))
 
 
@@ -222,7 +224,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),
                               cfg.unroll_layers)
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
-    logits = unembed(params, cfg, x)[:, 0]
+    logits = unembed(params, cfg, x, ctx)[:, 0]
     return ctx.shard(logits, ("batch", "vocab")), new_cache
 
 
@@ -241,5 +243,5 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),
                               cfg.unroll_layers)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = unembed(params, cfg, x)[:, 0]
+    logits = unembed(params, cfg, x, ctx)[:, 0]
     return ctx.shard(logits, ("batch", "vocab")), new_cache

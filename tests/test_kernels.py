@@ -104,3 +104,68 @@ def test_w4a8_path():
     want = np.asarray(x @ w, np.float32)
     rel = np.abs(got - want).mean() / np.abs(want).mean()
     assert rel < 0.05
+
+
+@pytest.mark.parametrize("bits,group", [(8, 32), (4, 64)])
+def test_w4a8_grouped_not_silently_wrong(bits, group):
+    """Grouped QTensors used to read only scale/zero row 0, silently
+    returning garbage for every group past the first; now the per-group
+    epilogue makes the grouped path agree with the fp matmul."""
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import w4a8_matmul
+    rng = np.random.default_rng(11)
+    # per-group magnitudes differ wildly so a row-0-only scale CANNOT pass
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    w *= np.repeat(10.0 ** rng.uniform(-2, 1, 128 // group), group)[:, None]
+    qt = make_qtensor(jnp.asarray(w), QuantConfig(bits=bits, group_size=group))
+    assert qt.group_size == group
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    got = np.asarray(w4a8_matmul(x, qt), np.float32)
+    # oracle: exact dequantized matmul — only the 8-bit activation quant
+    # separates the two, so a scale/zero row-0-only bug shows up as O(1)
+    want = np.asarray(x @ qt.dequantize(jnp.float32), np.float32)
+    rel = np.abs(got - want).mean() / np.abs(want).mean()
+    assert rel < 0.03, f"grouped w4a8 diverged (rel={rel:.3f})"
+
+
+def test_w4a8_rejects_stacked():
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import w4a8_matmul
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.normal(size=(2, 64, 16)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=8, group_size=None))
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    with pytest.raises(ValueError, match="non-stacked"):
+        w4a8_matmul(x, qt)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("K,group,block_k", [
+    (48, 16, 32),     # K % snapped bk != 0: K pads 48 -> 64
+    (80, 16, 32),     # K pads 80 -> 96
+    (96, 32, 64),     # bk % g == 0 but K % bk != 0: K pads 96 -> 128
+    (40, 40, 64),     # per-channel, K < block_k: no padding needed
+    (24, 8, 16),      # tiny everything
+])
+def test_quant_matmul_k_padding(bits, K, group, block_k):
+    """Regression: when bk snapping/padding changes the K grid, EVERY
+    K-keyed operand (x cols, packed rows, scale/zero rows) must pad
+    together — the wrapper used to pad only x and shape-error."""
+    M, N = 8, 32
+    rng = np.random.default_rng(bits * 10 + K)
+    codes = rng.integers(0, 1 << bits, (K, N)).astype(np.uint8)
+    scale = (rng.random((K // group, N)).astype(np.float32) + 0.5) * 0.1
+    zero = rng.integers(0, 1 << bits, (K // group, N)).astype(np.float32)
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    got = quant_matmul_op(x, packed, jnp.asarray(scale), jnp.asarray(zero),
+                          bits=bits, group_size=group,
+                          block_m=8, block_n=32, block_k=block_k)
+    want = ref.quant_matmul_ref(x, packed, jnp.asarray(scale),
+                                jnp.asarray(zero), bits=bits,
+                                group_size=group)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-3, atol=1e-3)

@@ -96,3 +96,37 @@ def test_memory_bytes_compression():
     assert qt2.memory_bytes() < fp16 / 6
     assert qt4.memory_bytes() < fp16 / 3
     assert qt2.memory_bytes() < qt4.memory_bytes()
+
+
+def test_memory_bytes_counts_true_metadata_dtype():
+    """The deployment memory report must charge scale/zero at the dtype
+    they are actually stored in (f32 = 4 bytes each), not a hard-coded
+    bf16 — at group_size=32 the old under-count was ~13% of a W2 artifact."""
+    import dataclasses
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    from repro.core.quantizer import make_qtensor
+    qt = make_qtensor(w, QuantConfig(bits=2, group_size=32))
+    assert qt.scale.dtype == jnp.float32 and qt.zero.dtype == jnp.float32
+    n_groups = 256 // 32
+    expected = (256 * 64 * 2 // 8                      # 2-bit container
+                + 2 * n_groups * 64 * 4)               # f32 scale + zero
+    assert qt.memory_bytes() == expected
+    # a bf16 deployment of the same metadata is credited with the savings
+    qt_bf16 = dataclasses.replace(qt,
+                                  scale=qt.scale.astype(jnp.bfloat16),
+                                  zero=qt.zero.astype(jnp.bfloat16))
+    assert qt_bf16.memory_bytes() == expected - n_groups * 64 * 4
+
+
+def test_memory_bytes_includes_stacked_layers():
+    """Stacked (L, in, out) QTensors count every layer's container bytes,
+    keeping memory_bytes consistent with quantized_memory_report's fp16
+    denominator."""
+    rng = np.random.default_rng(6)
+    from repro.core.quantizer import make_qtensor
+    qcfg = QuantConfig(bits=4, group_size=32)
+    w1 = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(3, 64, 16)), jnp.float32)
+    assert make_qtensor(w3, qcfg).memory_bytes() == \
+        3 * make_qtensor(w1, qcfg).memory_bytes()
