@@ -8,37 +8,50 @@ tinyllama config, across the inner-loop implementations:
                     bit-for-bit parity oracle for the device engine;
   * ``device``    — the scanned on-device engine;
   * ``sharded``   — the device engine's scanned step shard_mapped over a
-                    data-parallel mesh (compared only when >1 device is
-                    visible, e.g. under
+                    data-parallel mesh with batch-sharded calibration
+                    streams and the hierarchical chunked gradient reduction
+                    (compared only when >1 device is visible, e.g. under
                     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
     PYTHONPATH=src python -m benchmarks.recon_speed [--dryrun] [--json PATH]
 
 Reports, per engine:
   * steady-state steps/sec over the full PAR loop (a warmup run through the
-    same per-stage cache pays each path's one-time compilation, exactly as
-    ``quantize_model`` amortizes it over a stage's blocks);
+    same per-stage cache pays each path's one-time compilation — including
+    BOTH PAR-iteration entry layouts, fresh single-device state and
+    committed loop-carry state — exactly as ``quantize_model`` amortizes it
+    over a stage's blocks);
   * blocking device->host reads per PAR iteration (via the
     ``recon_engine.host_read`` counter) — the device engine's contract is
     <= 1, and that one is the optional log line.
 
-With multiple devices it additionally runs the sharded-vs-device comparison
-at a DP-divisible batch size and a three-way parity gate on identical
-inputs at a PINNED calibration horizon (K=3, T=15 — independent of the
-perf-run scale): sharded == device == reference on the discrete artifacts
-(hardened mask + packed codes, bit-for-bit) with folded scales within
-1e-5.  XLA's per-program compilation choices inject ~1-ulp lane noise
-into the continuous state at some batch widths/horizons, which only the
-scales see; the discrete deployment artifact absorbs it
-(``tests/test_recon_engine.py`` pins full bit-exactness, scales included,
-at the unit-test scales).
+With multiple devices it additionally runs:
+  * the sharded-vs-device throughput comparison at a chunking-exercising
+    batch size (4x the DP degree, so each device reduces several gradient
+    lanes locally before the one fused partial exchange);
+  * a per-device calibration-stream memory measurement (batch-sharded
+    streams must hold ~1/D of the replicated bytes per device);
+  * a three-way parity gate on identical inputs at a PINNED calibration
+    horizon (K=3, T=15 — independent of the perf-run scale): sharded ==
+    device == reference on the discrete artifacts (hardened mask + packed
+    codes, bit-for-bit) with folded scales within 1e-5.  XLA's per-program
+    compilation choices inject ~1-ulp lane noise into the continuous state
+    at some batch widths/horizons, which only the scales see; the discrete
+    deployment artifact absorbs it (``tests/test_recon_engine.py`` pins
+    full bit-exactness, scales included, at the unit-test scales).
 
-Every row also lands in a machine-readable JSON artifact (``--json``,
-default ``BENCH_recon.json``) so CI can archive a perf trajectory per run.
+Every gate lands in ``BENCH_recon.json`` under ``gates`` as an explicit
+``{name, threshold, measured, ok, cmp}`` record (plus the legacy ``checks``
+map), so a regression can never ship green without leaving a paper trail:
+the run FAILS (non-zero exit) if any applicable gate fails.  In the full
+(non ``--dryrun``) configuration that includes ``sharded_vs_device >= 1.0``
+— a data-parallel engine that loses to one device is a perf bug, not a
+footnote.
 
 ``--dryrun`` shrinks the step counts so the script doubles as a CI smoke
-test (`make bench-smoke`); the speedup assertion only runs in the full
-configuration.
+test (`make bench-smoke`); the throughput gates only run in the full
+configuration (tiny dryrun step counts measure dispatch overhead, not
+steady state), parity and memory gates always run.
 """
 from __future__ import annotations
 
@@ -90,10 +103,15 @@ def run_engine(engine, apply, bp, X, Y, qmeta, qcfg, tcfg, *, with_log,
 
 def bench_engine(engine, apply, bp, X, Y, qmeta, qcfg, *, K, T, bs):
     """Warmup through a per-stage cache (pays compilation once, as the
-    pipeline amortizes it over a stage's blocks), then a timed run."""
+    pipeline amortizes it over a stage's blocks), then a timed run.
+
+    The warmup runs TWO PAR iterations: iteration 0 enters the jitted loop
+    with freshly-built (single-device) state, iteration 1 with the previous
+    dispatch's committed outputs — two different input layouts, two
+    compilation cache entries, both of which the timed run must hit."""
     tcfg = TQ.TesseraQConfig(par_iterations=K, steps_per_iteration=T,
                              batch_size=bs, engine=engine)
-    warm = TQ.TesseraQConfig(par_iterations=1, steps_per_iteration=T,
+    warm = TQ.TesseraQConfig(par_iterations=2, steps_per_iteration=T,
                              batch_size=bs, engine=engine)
     cache = {}
     run_engine(engine, apply, bp, X, Y, qmeta, qcfg, warm, with_log=True,
@@ -121,10 +139,31 @@ def _meta_parity(a, b):
     return True, "ok"
 
 
+def stream_bytes_per_device(plan: "RE.BatchPlan") -> int:
+    """Largest per-device share of the staged calibration streams."""
+    per: dict = {}
+    for arr in (plan.X, plan.Y, plan.aux):
+        if arr is None:
+            continue
+        for s in arr.addressable_shards:
+            per[s.device] = per.get(s.device, 0) + s.data.nbytes
+    return max(per.values())
+
+
+def _gate(out, name, *, threshold, measured, ok, cmp):
+    """One machine-readable gate record; the run fails if any is not ok."""
+    out["gates"].append({"name": name, "threshold": float(threshold),
+                         "measured": float(measured), "ok": bool(ok),
+                         "cmp": cmp})
+    print(f"gate: {name}: {'PASS' if ok else 'FAIL'} "
+          f"(measured {measured:.4g}, want {cmp} {threshold:.4g})")
+    return bool(ok)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true",
-                    help="tiny step counts, no speedup assertion (CI smoke)")
+                    help="tiny step counts, no throughput gates (CI smoke)")
     ap.add_argument("--par-k", type=int, default=None)
     ap.add_argument("--steps-t", type=int, default=None)
     ap.add_argument("--json", default="BENCH_recon.json",
@@ -135,14 +174,15 @@ def main(argv=None):
     T = args.steps_t or (4 if args.dryrun else 60)
     n_dev = len(jax.devices())
 
-    # the calibration pool must be able to fill one DP-divisible minibatch
-    # on hosts with many devices (bs = dp degree in the sharded section)
-    apply, bp, X, Y = make_problem(n_samples=max(8, n_dev))
+    # the calibration pool must fill the sharded section's chunking-
+    # exercising minibatch (bs = 4x the DP degree) on multi-device hosts
+    apply, bp, X, Y = make_problem(n_samples=max(8, 4 * n_dev))
     qcfg = QuantConfig(bits=2, group_size=32)
     _, qmeta = quantize_block_rtn(bp, qcfg)
 
     out = {"dryrun": args.dryrun, "n_devices": n_dev, "par_k": K,
-           "steps_t": T, "engines": {}, "speedups": {}, "checks": {}}
+           "steps_t": T, "engines": {}, "speedups": {}, "checks": {},
+           "gates": []}
 
     results = {}
     for engine in ("legacy", "reference", "device"):
@@ -165,12 +205,30 @@ def main(argv=None):
     emit("recon_speed", "device_vs_reference", "speedup",
          f"{speedup_ref:.2f}")
 
-    ok_parity = True
-    if n_dev > 1:
-        # sharded-vs-device perf comparison at a DP-divisible batch size
+    ok_all = True
+    sharded_ok = n_dev > 1
+    if sharded_ok:
         mesh = make_data_mesh()
-        bs = dp_size(mesh)
+        dp = dp_size(mesh)
+        bs = min(4 * dp, X.shape[0])
+        if RE.grad_chunk_count(bs, X.shape[0]) % dp:
+            # e.g. a forced 6-way host platform: the canonical chunk count
+            # gcd(bs, pool, CANONICAL_LANE_CHUNKS) cannot absorb this DP
+            # degree — record why and still emit the artifact instead of
+            # dying with a traceback and no JSON
+            out["sharded_skipped"] = (
+                f"DP degree {dp} does not divide the canonical chunk "
+                f"count {RE.grad_chunk_count(bs, X.shape[0])} "
+                f"(bs={bs}, pool={X.shape[0]}, "
+                f"cap={RE.CANONICAL_LANE_CHUNKS})")
+            print(f"sharded section skipped: {out['sharded_skipped']}")
+            sharded_ok = False
+    if sharded_ok:
+        # sharded-vs-device perf comparison at a batch size that exercises
+        # the hierarchical reduction: several lanes per device reduce
+        # locally, only the per-shard chunk partials cross the interconnect
         out["sharded_batch_size"] = bs
+        out["grad_chunks"] = RE.grad_chunk_count(bs, X.shape[0])
         for engine in ("device", "sharded"):
             r, _ = bench_engine(engine, apply, bp, X, Y, qmeta,
                                 qcfg, K=K, T=T, bs=bs)
@@ -182,6 +240,27 @@ def main(argv=None):
         out["speedups"]["sharded_vs_device"] = sharded_vs_dev
         emit("recon_speed", "sharded_vs_device", "speedup",
              f"{sharded_vs_dev:.2f}")
+
+        # per-device calibration-stream memory: batch-sharded streams hold
+        # ~1/D of the bytes a replicated pool would pin on every device.
+        # The replicated baseline is computed on host (staging a second
+        # device copy of the pool just to read .nbytes would double the
+        # bench's footprint): X at its own dtype, Y promoted to float32
+        # exactly as stage_calibration stores it.
+        plan_sh = RE.stage_plan(X, Y, batch_size=bs, total_steps=1,
+                                mesh=mesh)
+        rep_bytes = int(np.asarray(X).nbytes + np.asarray(Y).size * 4)
+        sh_bytes = stream_bytes_per_device(plan_sh)
+        mem_reduction = rep_bytes / max(sh_bytes, 1)
+        out["calibration_stream"] = {
+            "replicated_bytes_per_device": rep_bytes,
+            "sharded_bytes_per_device": sh_bytes,
+            "reduction": mem_reduction}
+        emit("recon_speed", "stream_mem_reduction", "x",
+             f"{mem_reduction:.2f}")
+        ok_all &= _gate(out, "stream_shard_reduction",
+                        threshold=0.9 * dp, measured=mem_reduction,
+                        ok=mem_reduction >= 0.9 * dp, cmp=">=")
 
         # three-way parity gate at the PINNED horizon (decoupled from the
         # perf-run scale: the determinism contract is a correctness gate
@@ -202,33 +281,39 @@ def main(argv=None):
         out["checks"]["sharded_eq_device"] = {"ok": ok_sd, "why": why_sd,
                                               "par_k": PK, "steps_t": PT}
         out["checks"]["device_eq_reference"] = {"ok": ok_dr, "why": why_dr}
-        ok_parity = ok_sd and ok_dr
         print(f"check: sharded == device (mask+codes bit-for-bit, "
               f"K={PK} T={PT}): {'PASS' if ok_sd else 'FAIL'} ({why_sd})")
         print(f"check: device == reference (mask+codes bit-for-bit): "
               f"{'PASS' if ok_dr else 'FAIL'} ({why_dr})")
+        ok_all &= _gate(out, "three_way_parity", threshold=1.0,
+                        measured=float(ok_sd and ok_dr),
+                        ok=ok_sd and ok_dr, cmp=">=")
+
+        if not args.dryrun:
+            ok_all &= _gate(out, "sharded_vs_device_throughput",
+                            threshold=1.0, measured=sharded_vs_dev,
+                            ok=sharded_vs_dev >= 1.0, cmp=">=")
 
     ok_sync = results["device"]["syncs_per_iter"] <= 1.0
     out["checks"]["device_host_syncs"] = {
         "ok": ok_sync, "per_iter": results["device"]["syncs_per_iter"]}
-    print(f"check: device <= 1 host sync per PAR iteration: "
-          f"{'PASS' if ok_sync else 'FAIL'} "
-          f"({results['device']['syncs_per_iter']:.2f}/iter)")
+    ok_all &= _gate(out, "device_host_syncs", threshold=1.0,
+                    measured=results["device"]["syncs_per_iter"],
+                    ok=ok_sync, cmp="<=")
 
-    ok_speed = True
     if not args.dryrun:
         ok_speed = speedup_legacy >= 3.0
         out["checks"]["device_3x_legacy"] = {"ok": ok_speed,
                                              "speedup": speedup_legacy}
-        print(f"check: device >= 3x legacy (pre-engine) steps/sec: "
-              f"{'PASS' if ok_speed else 'FAIL'} ({speedup_legacy:.2f}x)")
+        ok_all &= _gate(out, "device_3x_legacy", threshold=3.0,
+                        measured=speedup_legacy, ok=ok_speed, cmp=">=")
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {args.json}")
 
-    if not (ok_sync and ok_speed and ok_parity):
+    if not ok_all:
         raise SystemExit(1)
 
 

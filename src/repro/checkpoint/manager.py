@@ -8,8 +8,8 @@ Design for preemptible fleets:
   * mesh-agnostic: leaves are saved fully-replicated host-side, so a restore
     may use ANY mesh (elastic re-scale = restore under a new mesh and
     re-apply param_shardings);
-  * retention: keep the newest ``keep`` steps, never delete the newest
-    complete one;
+  * retention: keep the newest ``keep`` COMPLETE steps — torn dirs never
+    count toward ``keep`` and the newest complete one is never deleted;
   * ``latest_step`` scans for complete checkpoints only (resume after crash).
 """
 from __future__ import annotations
@@ -85,12 +85,29 @@ class CheckpointManager:
         self._gc()
 
     def _gc(self):
-        steps = sorted(s for s in (self.latest_step(),) if s is not None)
-        all_steps = sorted(
+        """Keep the newest ``keep`` COMPLETE checkpoints.  Torn dirs (a
+        step_N without MANIFEST.json — e.g. a crash on a filesystem whose
+        rename isn't atomic) must never count toward ``keep``: if they did,
+        a run that crashed a few times in a row would see its newest
+        complete checkpoints deleted while the unusable torn dirs survive.
+        Torn dirs older than the newest complete step are swept as garbage;
+        newer ones are left alone (they may be another writer mid-flight)
+        — ``latest_step`` ignores them either way."""
+        complete = sorted(
             int(n.split("_")[1]) for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp"))
-        for s in all_steps[:-self.keep]:
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.dir, n, "MANIFEST.json")))
+        for s in complete[:-self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        if complete:
+            newest = complete[-1]
+            for n in os.listdir(self.dir):
+                if not n.startswith("step_") or n.endswith(".tmp"):
+                    continue
+                full = os.path.join(self.dir, n)
+                if not os.path.exists(os.path.join(full, "MANIFEST.json")) \
+                        and int(n.split("_")[1]) < newest:
+                    shutil.rmtree(full, ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:

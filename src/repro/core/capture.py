@@ -28,22 +28,32 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.blocks import get_path, quant_leaf_paths
-from repro.launch.mesh import dp_axes, dp_size
+from repro.launch.mesh import batch_spec, dp_size
 from repro.models import layers as L
 
 MAX_ROWS = 1024          # token subsample kept per linear for objectives
 
 
-def stage_calibration(X, Y=None, aux=None) -> Tuple:
+def stage_calibration(X, Y=None, aux=None, *, mesh=None) -> Tuple:
     """Move a block's calibration streams to device *once*.
 
     The reconstruction inner loop gathers minibatches out of these staged
     arrays with a device-side ``take``; all host->device traffic for a block
     happens here, before the first optimization step, instead of one transfer
-    per step.  Y is promoted to float32 (the reconstruction-loss dtype)."""
+    per step.  Y is promoted to float32 (the reconstruction-loss dtype).
+
+    With ``mesh`` each stream is placed with its batch dim sharded over the
+    mesh's data-parallel axes (``shard_stream``): every device holds only
+    its 1/D slice of the pool, which is exactly the slice the sharded
+    reconstruction engine's local index plan reads — the streams never need
+    to be replicated."""
     Xd = jnp.asarray(X)
     Yd = jnp.asarray(Y, jnp.float32) if Y is not None else None
     auxd = jnp.asarray(aux) if aux is not None else None
+    if mesh is not None:
+        Xd = shard_stream(Xd, mesh)
+        Yd = shard_stream(Yd, mesh) if Yd is not None else None
+        auxd = shard_stream(auxd, mesh) if auxd is not None else None
     return Xd, Yd, auxd
 
 
@@ -58,10 +68,9 @@ def shard_stream(x, mesh):
     """Place one activation minibatch mesh-resident with its batch dim (0)
     sharded over the DP axes; batch sizes that don't divide the DP degree
     fall back to replication (same contract as ``sharding.resolve_spec``)."""
-    dp = dp_axes(mesh)
-    spec = P()
-    if dp and x.shape[0] % dp_size(mesh) == 0:
-        spec = P(dp if len(dp) > 1 else dp[0])
+    spec = batch_spec(mesh)
+    if spec != P() and x.shape[0] % dp_size(mesh):
+        spec = P()
     return jax.device_put(x, NamedSharding(mesh, spec))
 
 

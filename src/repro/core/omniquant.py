@@ -11,7 +11,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import QuantConfig
 from repro.core import quantizer as Q
@@ -75,14 +74,14 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
     opt = AdamW(lr=lr)
     frozen = {"bp": bp, "ws": ws}
     if engine in ("device", "sharded"):
+        m = RE.resolve_mesh(mesh) if engine == "sharded" else None
         eng = cache.get(engine) if cache is not None else None
         if eng is None:
-            m = RE.resolve_mesh(mesh) if engine == "sharded" else None
             eng = RE.ReconstructionEngine(loss_fn, opt, mesh=m)
             if cache is not None:
                 cache[engine] = eng
         plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
-                             total_steps=steps, seed=seed)
+                             total_steps=steps, seed=seed, mesh=m)
         st = eng.init(tr)
         chunk = 100 if log is not None else steps
         for t0 in range(0, steps, chunk):
@@ -94,11 +93,11 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qcfg: QuantConfig, *,
     else:
         grad_fn = jax.jit(jax.value_and_grad(loss_fn))
         st = opt.init(tr)
-        rng = np.random.default_rng(seed)
         N = X.shape[0]
         bs = min(batch_size, N)
+        plan = RE.draw_index_plan(N, bs, steps, seed)
         for t in range(steps):
-            idx = rng.choice(N, bs, replace=False)
+            idx = plan[t]
             auxb = jnp.asarray(aux[idx]) if aux is not None else None
             lv, grads = grad_fn(tr, frozen, jnp.asarray(X[idx]),
                                 jnp.asarray(Y[idx], jnp.float32), auxb)

@@ -91,6 +91,14 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
                 "or shrink the mesh")
         bs = min(tcfg.batch_size + (-tcfg.batch_size % D),
                  n_pool - n_pool % D)
+        if re_mod.grad_chunk_count(bs, n_pool) % D:
+            raise ValueError(
+                f"calibration pool size {n_pool} is incompatible with the "
+                f"mesh's data-parallel degree {D}: the canonical gradient "
+                f"chunk count gcd(batch={bs}, pool={n_pool}, "
+                f"cap={re_mod.CANONICAL_LANE_CHUNKS}) must be a multiple "
+                f"of {D} — use a calibration pool whose size is a multiple "
+                "of the DP degree (or shrink the mesh)")
         tcfg = dataclasses.replace(tcfg, mesh=mesh, batch_size=bs)
     stages = build_stages(cfg, ctx)
     params_q = params
@@ -161,8 +169,10 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
 
                 log: list = []
                 # one host->device transfer per block: every engine gathers
-                # its minibatches out of these staged streams
-                Xd, Yd, auxd = stage_calibration(src, Y, aux)
+                # its minibatches out of these staged streams (batch-sharded
+                # over the mesh, so they land shard-resident straight out of
+                # the pipelined capture — no replicated copies per device)
+                Xd, Yd, auxd = stage_calibration(src, Y, aux, mesh=mesh)
                 if method == "tesseraq":
                     bp_q, qmeta = tq_mod.reconstruct_block(
                         stage.apply, bp_fp, Xd, Yd, auxd, qmeta, qcfg, tcfg,

@@ -9,11 +9,12 @@ by dispatch overhead and host<->device ping-pong, not math.  This module
 keeps the whole loop on the device:
 
   * **Batch pre-staging** — the calibration streams X / Y / aux are moved to
-    the device once per block (``capture.stage_calibration``) and the entire
-    minibatch index plan for all K*T steps is drawn up front from
-    ``np.random.default_rng(seed)`` — the *same* generator and draw order as
-    the legacy host loop, so the two paths see identical batches.  Inside the
-    loop, minibatches are device-side ``take`` gathers.
+    the device once per block (``capture.stage_calibration``; batch-sharded
+    over the mesh when one is given) and the entire minibatch index plan for
+    all K*T steps is drawn up front by ``draw_index_plan`` — the *same*
+    canonical draw sequence the host-loop engines consume, so every path
+    sees identical batches.  Inside the loop, minibatches are device-side
+    ``take`` gathers.
 
   * **Scanned soften phase** — the T Adam (or SignSGD) steps of one PAR
     iteration run as a single ``jax.lax.scan``; trainables and optimizer
@@ -31,34 +32,43 @@ keeps the whole loop on the device:
     iteration is the optional log line, and it is routed through
     ``host_read`` so tests and benchmarks can count syncs.
 
-  * **Canonical (device-count-invariant) batch gradients** — the batch
-    dimension is the only dimension the sharded engine splits across
-    devices, so the reduction over it is associativity-pinned: the step
-    gradient is defined as the ordered mean of per-sample gradients
-    (``vmap`` lanes over the minibatch, one ordered ``sum`` over the sample
-    axis).  Per-lane arithmetic does not depend on how many lanes run
-    together, so the same minibatch yields bit-identical gradients whether
-    the lanes run on one device or are split across a mesh — up to
-    compiler scheduling: XLA may still compile a lane's GEMMs differently
-    inside different surrounding programs, which injects ~1-ulp noise at
-    long horizons.  The DISCRETE artifacts (hardened mask + packed codes)
+  * **Canonical (device-count-invariant) chunked batch gradients** — the
+    batch dimension is the only dimension the sharded engine splits across
+    devices, so the reduction over it is associativity-pinned as a
+    two-level *chunked ordered mean*: the minibatch's per-sample gradient
+    lanes (``vmap`` lanes, whose arithmetic does not depend on how many
+    lanes run together) are grouped into ``C = grad_chunk_count(bs, N)``
+    fixed contiguous chunks, each chunk is reduced with one ordered lane
+    sum, and the C chunk partials are combined with one ordered sum in
+    chunk order, then divided by the batch size.  C is a pure function of
+    the minibatch size and the pool size (never of the device count), so
+    the same minibatch yields bit-identical gradients whether the chunks
+    are computed on one device or spread across a mesh — up to compiler
+    scheduling: XLA may still compile a lane's GEMMs differently inside
+    different surrounding programs, which injects ~1-ulp noise at long
+    horizons.  The DISCRETE artifacts (hardened mask + packed codes)
     absorb that noise and stay bit-identical at the calibration horizons
     the tests and benchmark gates pin (see ``tests/test_recon_engine.py``
     and ``benchmarks/recon_speed.py``).
 
   * **Mesh-sharded soften phase** — with a ``mesh``, the same scanned step
-    runs under ``shard_map``: each step's minibatch is split over the mesh's
-    data-parallel axes (device r takes rows [r*bs/D, (r+1)*bs/D) of the
-    step's index-plan row), every device computes its local per-sample
-    gradient lanes, and the reduction is an ``all_gather`` of the lane
-    stacks in sample order followed by the same ordered sum — an ordered
-    psum, deterministic where a raw ``lax.psum`` would leave the summation
-    order to the backend.  Rounding variables, DST variables and Adam state
-    stay REPLICATED — every device applies the identical reduced gradient,
-    so the trainables never desynchronize across the mesh and the hardened
-    mask is computed from a single consistent copy.  The calibration pool
-    itself is replicated (it is small — the minibatch, not the pool, is the
-    thing worth sharding), which keeps the per-step gather local.
+    runs under ``shard_map``, hierarchically: each device owns C/D of the
+    canonical chunks (device r takes rows [r*bs/D, (r+1)*bs/D) of the
+    step's index-plan row), computes its per-sample lanes and reduces them
+    LOCALLY into its per-chunk partial sums, and only those partials — one
+    flattened (C/D, |params|) array per device, O(C x |params|) total, not
+    the O(bs x |params|) per-sample lane stacks — cross the interconnect in
+    a single fused ``all_gather``.  Every device then applies the same
+    rank-ordered combine over the C gathered partials the single-device
+    engine applies to its own chunk partials.  Rounding variables, DST
+    variables and Adam state stay REPLICATED — every device applies the
+    identical reduced gradient, so the trainables never desynchronize
+    across the mesh and the hardened mask is computed from a single
+    consistent copy.  The calibration pool itself is SHARDED over the DP
+    axes (``in_specs`` carry a batch-dim ``PartitionSpec``): the canonical
+    index plan draws chunk j's samples from pool shard j, so device r's
+    chunks read only rows it already owns — per-device calibration-stream
+    memory shrinks by the DP degree and the per-step gather stays local.
 
 The host-loop paths are kept alongside: ``TesseraQConfig.engine =
 "reference"`` (NumPy harden + fused jitted step — the oracle
@@ -70,6 +80,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -78,7 +89,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.capture import stage_calibration
-from repro.launch.mesh import (dp_axes, dp_size, make_data_mesh,
+from repro.launch.mesh import (batch_spec, dp_axes, dp_size, make_data_mesh,
                                shard_map_compat)
 
 # ---------------------------------------------------------------------------
@@ -208,8 +219,30 @@ def _dp_rank(mesh, dp):
 
 
 # ---------------------------------------------------------------------------
-# canonical (device-count-invariant) batch gradients
+# canonical (device-count-invariant) chunked batch gradients
 # ---------------------------------------------------------------------------
+
+# The canonical gradient association groups a minibatch's per-sample lanes
+# into at most this many contiguous chunks.  8 matches the CI multi-device
+# job's DP degree: any power-of-2 mesh up to 8-way owns a whole number of
+# chunks, so the chunk grid — and therefore every bit of the rounding
+# trajectory — is identical on 1 device and on the mesh.
+CANONICAL_LANE_CHUNKS = 8
+
+
+def grad_chunk_count(batch_size: int, pool: int) -> int:
+    """Number of chunks in the canonical gradient association for a
+    ``batch_size`` minibatch drawn from a ``pool``-sample calibration pool.
+
+    A pure function of (batch_size, pool) — NEVER of the device count —
+    so every engine (device / reference / sharded, any mesh) reduces with
+    the identical association.  It must divide the batch (equal chunks)
+    and the pool (the index plan draws chunk j from pool shard j), hence
+    the gcd; ``CANONICAL_LANE_CHUNKS`` caps it so the cross-device
+    exchange stays O(chunks x |params|).  A sharded engine additionally
+    requires its DP degree to divide this count (checked in ``run``)."""
+    return math.gcd(math.gcd(batch_size, CANONICAL_LANE_CHUNKS), pool)
+
 
 def make_per_sample_grad(loss_fn: Callable) -> Callable:
     """Per-sample (lane) value-and-grad of a minibatch ``loss_fn``.
@@ -232,24 +265,71 @@ def make_per_sample_grad(loss_fn: Callable) -> Callable:
     return f
 
 
-def _lane_mean(loss_lanes, grad_lanes):
-    """The ordered sample-axis reduction both engines share: one ``sum``
-    over axis 0 (a fixed left-to-right association for a given minibatch
-    size) divided by the lane count."""
-    bs = loss_lanes.shape[0]
-    grads = jax.tree_util.tree_map(lambda s: jnp.sum(s, axis=0) / bs,
-                                   grad_lanes)
-    return jnp.sum(loss_lanes) / bs, grads
+def _chunk_partials(loss_lanes, grad_lanes, chunks: int):
+    """First level of the canonical association: group the lanes into
+    ``chunks`` contiguous chunks and reduce each with one ordered lane sum
+    (one batched reduce over the chunk-width axis — a fixed association
+    for a given chunk width).
+
+    Note the cross-PROGRAM caveat: when the chunk width exceeds one lane,
+    XLA may lower this reduce marginally differently for a (C, c, ...)
+    device-engine stack than for a (C/D, c, ...) local shard, which can
+    inject ~1-ulp noise into the continuous state exactly like the
+    per-lane GEMM scheduling noise the engine already documents; the
+    discrete artifacts (hardened mask + packed codes) absorb it, and the
+    parity gates pin them bit-for-bit."""
+    def csum(s):
+        return jnp.sum(
+            s.reshape((chunks, s.shape[0] // chunks) + s.shape[1:]), axis=1)
+    return csum(loss_lanes), jax.tree_util.tree_map(csum, grad_lanes)
 
 
-def make_canonical_grad(loss_fn: Callable) -> Callable:
-    """``value_and_grad`` with the canonical per-sample reduction — the
-    exact gradient HLO inside the device engine's scanned step, exposed so
-    the host-loop reference oracle can pin against it bit-for-bit."""
+def _combine_partials(loss_partials, grad_partials, batch_size: int):
+    """Second level: one ordered sum over the chunk partials in chunk order
+    — identical (C, ...) operand shape on every engine, so the final
+    association never depends on where the partials were computed —
+    divided by the GLOBAL minibatch size."""
+    grads = jax.tree_util.tree_map(
+        lambda s: jnp.sum(s, axis=0) / batch_size, grad_partials)
+    return jnp.sum(loss_partials) / batch_size, grads
+
+
+def _flatten_partials(loss_partials, grad_partials):
+    """Pack the per-chunk loss + gradient partials into ONE (chunks, width)
+    float32 matrix, so the sharded engine exchanges a single fused
+    ``all_gather`` per step instead of one collective per pytree leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(grad_partials)
+    cols = [loss_partials[:, None].astype(jnp.float32)]
+    cols += [leaf.reshape(leaf.shape[0], -1) for leaf in leaves]
+    shapes = [leaf.shape[1:] for leaf in leaves]
+    return jnp.concatenate(cols, axis=1), treedef, shapes
+
+
+def _unflatten_partials(flat, treedef, shapes):
+    """Inverse of ``_flatten_partials`` after the gather: the leading dim is
+    now the FULL canonical chunk count, restored per leaf to the exact
+    (C, *param_shape) arrays the single-device engine reduces."""
+    loss_partials = flat[:, 0]
+    leaves, col = [], 1
+    for shp in shapes:
+        n = int(np.prod(shp)) if shp else 1
+        leaves.append(flat[:, col:col + n].reshape((flat.shape[0],) + shp))
+        col += n
+    return loss_partials, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def make_canonical_grad(loss_fn: Callable, *, chunks: int) -> Callable:
+    """``value_and_grad`` with the canonical chunked per-sample reduction —
+    the exact gradient HLO inside the device engine's scanned step, exposed
+    so the host-loop reference oracle can pin against it bit-for-bit.
+    ``chunks`` must be ``grad_chunk_count(bs, pool)`` for the caller's
+    minibatch/pool sizes."""
     per_sample = make_per_sample_grad(loss_fn)
 
     def grad_fn(tr, frozen, xb, yb, auxb):
-        return _lane_mean(*per_sample(tr, frozen, xb, yb, auxb))
+        lv, grads = per_sample(tr, frozen, xb, yb, auxb)
+        lp, gp = _chunk_partials(lv, grads, chunks)
+        return _combine_partials(lp, gp, xb.shape[0])
     return grad_fn
 
 
@@ -261,26 +341,53 @@ def make_canonical_grad(loss_fn: Callable) -> Callable:
 class BatchPlan:
     """Per-block staged calibration data + the full minibatch index plan.
 
-    The plan is drawn once from ``np.random.default_rng(seed)`` — identical
-    draws, in the same order, as a host loop calling ``rng.choice(N, bs,
-    replace=False)`` once per step, which is what pins the device engine to
-    the reference path batch-for-batch."""
+    The plan is drawn once by ``draw_index_plan`` — identical draws, in the
+    same order, as the host-loop engines, which is what pins the device and
+    sharded engines to the reference path batch-for-batch.  With a mesh the
+    streams are staged batch-sharded over the DP axes (``chunks`` is the
+    canonical gradient chunk count the plan's draws are stratified over)."""
     X: Any
     Y: Any
     aux: Any
     index_plan: Any        # (total_steps, bs) int32, on device
     total_steps: int
+    chunks: int = 1
+
+
+def draw_index_plan(N: int, batch_size: int, total_steps: int,
+                    seed: int = 0) -> np.ndarray:
+    """The canonical minibatch index plan every engine consumes.
+
+    Draws are STRATIFIED over the canonical chunk grid: the pool is split
+    into ``C = grad_chunk_count(bs, N)`` equal contiguous shards and chunk
+    j of each step's minibatch draws its ``bs/C`` samples (without
+    replacement) from pool shard j, in one fixed rng sequence
+    (step-major, chunk-major).  Chunk j's rows therefore always live on
+    the device that owns pool shard j when the pool is batch-sharded over
+    a mesh — the sharded engine never has to move calibration data — while
+    the plan itself is a pure function of (N, bs, steps, seed), so every
+    engine at every device count sees identical global minibatches."""
+    bs = min(batch_size, N)
+    if total_steps <= 0:
+        return np.empty((0, bs), np.int32)
+    C = grad_chunk_count(bs, N)
+    c, Ns = bs // C, N // C
+    rng = np.random.default_rng(seed)
+    plan = np.stack([
+        np.concatenate([j * Ns + rng.choice(Ns, c, replace=False)
+                        for j in range(C)])
+        for _ in range(total_steps)])
+    return plan.astype(np.int32)
 
 
 def stage_plan(X, Y, aux=None, *, batch_size: int, total_steps: int,
-               seed: int = 0) -> BatchPlan:
-    Xd, Yd, auxd = stage_calibration(X, Y, aux)
+               seed: int = 0, mesh=None) -> BatchPlan:
+    Xd, Yd, auxd = stage_calibration(X, Y, aux, mesh=mesh)
     N = Xd.shape[0]
     bs = min(batch_size, N)
-    rng = np.random.default_rng(seed)
-    plan = np.stack([rng.choice(N, bs, replace=False)
-                     for _ in range(total_steps)])
-    return BatchPlan(Xd, Yd, auxd, jnp.asarray(plan, jnp.int32), total_steps)
+    plan = draw_index_plan(N, bs, total_steps, seed)
+    return BatchPlan(Xd, Yd, auxd, jnp.asarray(plan, jnp.int32), total_steps,
+                     grad_chunk_count(bs, N))
 
 
 class ReconstructionEngine:
@@ -299,73 +406,88 @@ class ReconstructionEngine:
     per-stage cache; compilation amortizes over the model's depth.
 
     With ``mesh`` the scanned step runs under ``shard_map``, data-parallel
-    over the mesh's DP axes: the per-step minibatch is split evenly across
-    the DP degree, each device computes its per-sample gradient lanes, the
-    lane stacks are ``all_gather``-ed in sample order and reduced with the
-    SAME ordered sum the single-device engine applies to its own lane
-    stack — so ``engine="sharded"`` reproduces ``engine="device"``
-    hardened masks and packed codes bit-for-bit at the pinned calibration
-    horizons (folded scales track to ~1 ulp at long horizons, where XLA's
+    over the mesh's DP axes, as a hierarchical chunked ordered reduction:
+    each device owns a contiguous slice of the canonical chunk grid
+    (``grad_chunk_count``), computes its per-sample gradient lanes from its
+    OWN shard of the batch-sharded calibration pool, reduces them locally
+    into per-chunk partial sums, and exchanges only those partials — one
+    fused ``all_gather`` of a (C/D, |params|+1) float32 matrix per step,
+    O(C x |params|) traffic instead of the O(bs x |params|) per-sample lane
+    stacks.  Every device then applies the SAME rank-ordered combine over
+    the C gathered chunk partials the single-device engine applies to its
+    own — so ``engine="sharded"`` reproduces ``engine="device"`` hardened
+    masks and packed codes bit-for-bit at the pinned calibration horizons
+    (folded scales track to ~1 ulp at long horizons, where XLA's
     per-program compilation choices inject lane-level rounding noise the
     discrete artifacts absorb).  Trainables, optimizer state and the frozen
     side state enter and leave replicated (``P()`` specs); the per-step
     update is identical on every device, so replication is an invariant of
-    the scan, not something that needs re-synchronizing.  The minibatch
-    size must divide by the DP degree (``run`` raises otherwise).
+    the scan, not something that needs re-synchronizing.  The canonical
+    chunk count must divide by the DP degree (``run`` raises otherwise).
     """
 
     def __init__(self, loss_fn: Callable, optimizer, *, donate: bool = True,
                  mesh=None):
         self.opt = optimizer
         self.mesh = mesh
-        self.dp_degree = 1 if mesh is None else dp_size(mesh)
+        self.dp_degree = D = 1 if mesh is None else dp_size(mesh)
         per_sample = make_per_sample_grad(loss_fn)
         opt = optimizer
 
         if mesh is None:
-            def grad_fn(tr, frozen, xb, yb, auxb):
-                return _lane_mean(*per_sample(tr, frozen, xb, yb, auxb))
+            def grad_fn(tr, frozen, xb, yb, auxb, chunks):
+                lv, grads = per_sample(tr, frozen, xb, yb, auxb)
+                lp, gp = _chunk_partials(lv, grads, chunks)
+                return _combine_partials(lp, gp, xb.shape[0])
 
-            def pick(i, r):
+            def pick(i, r, n_local):
                 return i
         else:
             dp = dp_axes(mesh)
             if not dp:
                 raise ValueError(f"mesh {mesh.axis_names} has no "
                                  "data-parallel axes ('pod'/'data')")
-            D = self.dp_degree
 
-            def grad_fn(tr, frozen, xb, yb, auxb):
-                # local lanes -> full lane stack in sample order -> the same
-                # ordered reduction as the single-device engine: an ordered
-                # psum (all_gather + fixed-association sum) instead of a raw
-                # lax.psum, whose association the backend may choose freely
+            def grad_fn(tr, frozen, xb, yb, auxb, chunks):
+                # local lanes -> LOCAL per-chunk ordered lane sums -> one
+                # fused all_gather of the per-shard chunk partials -> the
+                # same rank-ordered combine over all C partials the
+                # single-device engine applies: a hierarchical ordered
+                # reduction, deterministic where a raw lax.psum would leave
+                # the association to the backend, and O(C x |params|) on
+                # the wire where gathering the lane stacks was O(bs x ...)
                 lv, grads = per_sample(tr, frozen, xb, yb, auxb)
-                lv = jax.lax.all_gather(lv, dp, axis=0, tiled=True)
-                grads = jax.tree_util.tree_map(
-                    lambda s: jax.lax.all_gather(s, dp, axis=0, tiled=True),
-                    grads)
-                return _lane_mean(lv, grads)
+                lp, gp = _chunk_partials(lv, grads, chunks // D)
+                flat, treedef, shapes = _flatten_partials(lp, gp)
+                flat = jax.lax.all_gather(flat, dp, axis=0, tiled=True)
+                lp, gp = _unflatten_partials(flat, treedef, shapes)
+                return _combine_partials(lp, gp, xb.shape[0] * D)
 
-            def pick(i, r):
+            def pick(i, r, n_local):
                 # device r takes rows [r*bs_local, (r+1)*bs_local) of the
                 # step's (replicated) index-plan row: the global minibatch
                 # is identical to the single-device engine's, only its rows
-                # are computed on different devices
+                # are computed on different devices.  The plan's stratified
+                # draws guarantee those rows live in this device's pool
+                # shard, so the global indices rebase to local ones by
+                # subtracting the shard offset.
                 bs_local = i.shape[0] // D
-                return jax.lax.dynamic_slice_in_dim(i, r * bs_local,
-                                                    bs_local)
+                li = jax.lax.dynamic_slice_in_dim(i, r * bs_local, bs_local)
+                return li - r * n_local
 
         def run(tr, opt_state, frozen, X, Y, aux, idx):
             rank = None if mesh is None else _dp_rank(mesh, dp_axes(mesh))
+            # static under jit: inside shard_map X is the LOCAL pool shard,
+            # so the global pool size is its length times the DP degree
+            chunks = grad_chunk_count(idx.shape[1], X.shape[0] * D)
 
             def step(carry, i):
                 tr, opt_state = carry
-                li = pick(i, rank)
+                li = pick(i, rank, X.shape[0])
                 xb = jnp.take(X, li, axis=0)
                 yb = jnp.take(Y, li, axis=0)
                 auxb = jnp.take(aux, li, axis=0) if aux is not None else None
-                lv, grads = grad_fn(tr, frozen, xb, yb, auxb)
+                lv, grads = grad_fn(tr, frozen, xb, yb, auxb, chunks)
                 tr, opt_state = opt.update(grads, opt_state, tr)
                 return (tr, opt_state), lv
             (tr, opt_state), losses = jax.lax.scan(step, (tr, opt_state),
@@ -373,18 +495,24 @@ class ReconstructionEngine:
             return tr, opt_state, losses[-1]
 
         if mesh is not None:
-            # everything replicated: only the *computation* is sharded (via
-            # the rank-dependent slice of the index plan); replication
-            # checking is off (in shard_map_compat) because axis_index makes
-            # intermediate values device-varying even though the gather
-            # restores replication before the update
+            # trainables / optimizer state / frozen side state / index plan
+            # replicated; the calibration streams X / Y / aux are SHARDED
+            # over the DP axes on their batch dim — each device stages and
+            # reads only its 1/D of the pool.  Replication checking is off
+            # (in shard_map_compat) because axis_index makes intermediate
+            # values device-varying even though the gather restores
+            # replication before the update.
+            bspec = batch_spec(mesh)
             run = shard_map_compat(
                 run, mesh=mesh,
-                in_specs=(P(), P(), P(), P(), P(), P(), P()),
+                in_specs=(P(), P(), P(), bspec, bspec, bspec, P()),
                 out_specs=(P(), P(), P()))
 
         # trainables + optimizer state are loop carries: donate them so the
-        # update happens in place where the backend supports aliasing
+        # update happens in place where the backend supports aliasing —
+        # except on CPU, where XLA cannot alias and donation only emits
+        # unusable-donation warnings (same guard as adam.jitted_update)
+        donate = donate and jax.default_backend() != "cpu"
         self._run = jax.jit(run, donate_argnums=(0, 1) if donate else ())
 
     def init(self, trainables):
@@ -398,10 +526,25 @@ class ReconstructionEngine:
         caller's (counted) choice."""
         steps = plan.total_steps - start if steps is None else steps
         idx = plan.index_plan[start:start + steps]
-        if idx.shape[1] % self.dp_degree:
+        chunks = grad_chunk_count(idx.shape[1], plan.X.shape[0])
+        if chunks != plan.chunks:
             raise ValueError(
-                f"minibatch size {idx.shape[1]} does not divide by the "
-                f"mesh's data-parallel degree {self.dp_degree}; pick a "
-                "batch_size that is a multiple of it (or shrink the mesh)")
+                f"plan was staged for {plan.chunks} canonical gradient "
+                f"chunks but the engine now derives {chunks} — "
+                "CANONICAL_LANE_CHUNKS changed after stage_plan drew the "
+                "stratified index plan; re-stage the plan (a mismatched "
+                "grid would read rows outside a device's pool shard)")
+        if chunks % self.dp_degree:
+            raise ValueError(
+                f"canonical gradient chunk count {chunks} (minibatch "
+                f"{idx.shape[1]}, pool {plan.X.shape[0]}, cap "
+                f"{CANONICAL_LANE_CHUNKS}) does not divide by the mesh's "
+                f"data-parallel degree {self.dp_degree}; pick a batch_size "
+                "and calibration pool that are multiples of it (or shrink "
+                "the mesh).  For a DP degree that does not divide "
+                f"{CANONICAL_LANE_CHUNKS} (e.g. 6- or 16-way), set "
+                "recon_engine.CANONICAL_LANE_CHUNKS to a multiple of it "
+                "before building engines — note this changes the canonical "
+                "rounding trajectory for batches wider than the cap")
         return self._run(trainables, opt_state, frozen,
                          plan.X, plan.Y, plan.aux, idx)

@@ -38,15 +38,18 @@ Two interchangeable inner-loop engines (``TesseraQConfig.engine``):
     in the last bits).
   * ``"sharded"`` — the device engine's scanned step under ``shard_map`` on
     ``TesseraQConfig.mesh`` (default: a 1-D data mesh over every visible
-    device): minibatches split over the mesh's DP axes, per-sample gradient
-    lanes all-gathered in sample order and reduced with the engine's
-    canonical ordered sum (an ordered psum), rounding/DST variables and
-    Adam state replicated.  The global minibatch sequence AND the gradient
-    reduction order are identical to ``"device"``, so the sharded engine
-    reproduces the device engine's hardened masks and packed codes
-    bit-for-bit at the pinned calibration horizons, with folded scales
-    tracking to ~1 ulp (pinned by ``tests/test_recon_engine.py`` and the
-    ``benchmarks/recon_speed.py`` parity gate).
+    device): calibration streams batch-sharded over the mesh's DP axes,
+    minibatch chunks computed on the device that owns their pool shard,
+    and the gradient reduced hierarchically — local per-chunk ordered lane
+    sums, one fused all_gather of the per-shard chunk partials, then the
+    engine's rank-ordered combine (``recon_engine.grad_chunk_count``
+    association).  Rounding/DST variables and Adam state stay replicated.
+    The global minibatch sequence AND the chunked reduction association are
+    identical to ``"device"``, so the sharded engine reproduces the device
+    engine's hardened masks and packed codes bit-for-bit at the pinned
+    calibration horizons, with folded scales tracking to ~1 ulp (pinned by
+    ``tests/test_recon_engine.py`` and the ``benchmarks/recon_speed.py``
+    parity gate).
 """
 from __future__ import annotations
 
@@ -274,9 +277,19 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
     function — the same HLO (canonical per-sample gradient reduction
     included) the device engine scans over."""
     opt = AdamW(lr=tcfg.lr)
-    step_fn = cache.get("reference") if cache is not None else None
+    N = X.shape[0]
+    bs = min(tcfg.batch_size, N)
+    # the canonical chunk count is baked into the compiled step, so a
+    # cache shared across pool/batch shapes — or across a mutated
+    # CANONICAL_LANE_CHUNKS cap — must not hand a stale association to a
+    # later block (the device engine recomputes it from shapes at trace
+    # time and cross-checks plan.chunks; this is the host-loop equivalent)
+    cache_key = ("reference", bs, N, RE.grad_chunk_count(bs, N))
+    step_fn = cache.get(cache_key) if cache is not None else None
     if step_fn is None:
-        grad_fn = RE.make_canonical_grad(_make_loss_fn(apply, qcfg, tcfg))
+        # the exact canonical chunked reduction the device engine scans over
+        grad_fn = RE.make_canonical_grad(_make_loss_fn(apply, qcfg, tcfg),
+                                         chunks=RE.grad_chunk_count(bs, N))
 
         @jax.jit
         def step_fn(tr, opt_state, frozen, xb, yb, auxb):
@@ -285,13 +298,11 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
             return tr, opt_state, lv
 
         if cache is not None:
-            cache["reference"] = step_fn
-
-    N = X.shape[0]
-    bs = min(tcfg.batch_size, N)
-    rng = np.random.default_rng(tcfg.seed)
+            cache[cache_key] = step_fn
 
     K = tcfg.par_iterations if tcfg.par else 1
+    T = tcfg.steps_per_iteration
+    plan = RE.draw_index_plan(N, bs, K * T, tcfg.seed)
     sr = list(tcfg.soft_rate)
     opt_state = None
     for k in range(K):
@@ -302,8 +313,8 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
         if opt_state is None or not tcfg.carry_opt_state:
             opt_state = opt.init(tr)
         lv = None
-        for _ in range(tcfg.steps_per_iteration):
-            idx = rng.choice(N, bs, replace=False)
+        for t in range(T):
+            idx = plan[k * T + t]
             xb = jnp.asarray(X[idx])
             yb = jnp.asarray(Y[idx], jnp.float32)
             auxb = jnp.asarray(aux[idx]) if aux is not None else None
@@ -332,9 +343,10 @@ def _run_legacy(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
 
     N = X.shape[0]
     bs = min(tcfg.batch_size, N)
-    rng = np.random.default_rng(tcfg.seed)
 
     K = tcfg.par_iterations if tcfg.par else 1
+    T = tcfg.steps_per_iteration
+    plan = RE.draw_index_plan(N, bs, K * T, tcfg.seed)
     sr = list(tcfg.soft_rate)
     opt_state = None
     for k in range(K):
@@ -345,8 +357,8 @@ def _run_legacy(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
         if opt_state is None or not tcfg.carry_opt_state:
             opt_state = opt.init(tr)
         lv = None
-        for _ in range(tcfg.steps_per_iteration):
-            idx = rng.choice(N, bs, replace=False)
+        for t in range(T):
+            idx = plan[k * T + t]
             lv, grads = grad_fn(tr, {"bp": bp, "sts": states},
                                 jnp.asarray(X[idx]),
                                 jnp.asarray(Y[idx], jnp.float32),
@@ -381,7 +393,7 @@ def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
         if cache is not None:
             cache[key] = eng
     plan = RE.stage_plan(X, Y, aux, batch_size=tcfg.batch_size,
-                         total_steps=K * T, seed=tcfg.seed)
+                         total_steps=K * T, seed=tcfg.seed, mesh=mesh)
 
     trainable_keys = ("nu", "v") if tcfg.dst else ("nu",)
 

@@ -7,6 +7,7 @@ never touches jax device state — required because the dry-run forces a
 from __future__ import annotations
 
 import jax
+from jax.sharding import PartitionSpec as P
 
 
 def _mk(shape, axes):
@@ -37,13 +38,24 @@ def make_mesh(shape, axes=None):
     return _mk(tuple(shape), tuple(axes))
 
 
+_DATA_MESH_CACHE: dict = {}
+
+
 def make_data_mesh(n_devices=None):
     """1-D pure data-parallel mesh over ``n_devices`` (default: all visible
     devices).  The default mesh for ``engine="sharded"`` reconstruction when
     the caller does not hand one in — on a host platform forced to N devices
-    this is the N-way calibration mesh the CI multi-device job exercises."""
+    this is the N-way calibration mesh the CI multi-device job exercises.
+
+    Memoized per device set: distinct-but-equal Mesh objects defeat jit's
+    tracing cache on jax 0.4.x, so every caller that resolves the default
+    mesh twice (e.g. one reconstruction per block) must get the SAME object
+    back or each block recompiles its inner loop."""
     n = len(jax.devices()) if n_devices is None else int(n_devices)
-    return _mk((n,), ("data",))
+    key = (n, tuple(d.id for d in jax.devices()[:n]))
+    if key not in _DATA_MESH_CACHE:
+        _DATA_MESH_CACHE[key] = _mk((n,), ("data",))
+    return _DATA_MESH_CACHE[key]
 
 
 def dp_axes(mesh) -> tuple:
@@ -61,6 +73,17 @@ def dp_size(mesh, axes=None) -> int:
 
 def tp_axis(mesh):
     return "model" if "model" in mesh.axis_names else None
+
+
+def batch_spec(mesh) -> P:
+    """PartitionSpec that shards a leading batch dimension over the mesh's
+    data-parallel axes (the one spec every batch-sharded path — capture
+    streams, the sharded reconstruction engine's calibration pool — shares,
+    so they always agree on the placement)."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return P()
+    return P(dp if len(dp) > 1 else dp[0])
 
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs):

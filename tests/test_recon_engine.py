@@ -50,7 +50,7 @@ def leaf_state(seed=0, shape=(32, 8), tie_fraction=0.0):
     return TQ._leaf_state(wj, meta, QCFG)
 
 
-def two_linear_block(seed=0, d=32):
+def two_linear_block(seed=0, d=32, n_samples=8):
     rng = np.random.default_rng(seed)
     bp = {"wq": jnp.asarray(rng.normal(size=(d, d)), jnp.float32),
           "w_up": jnp.asarray(rng.normal(size=(d, 2 * d)), jnp.float32)}
@@ -62,7 +62,7 @@ def two_linear_block(seed=0, d=32):
             out = out + aux
         return out
 
-    X = rng.normal(size=(8, 6, d)).astype(np.float32)
+    X = rng.normal(size=(n_samples, 6, d)).astype(np.float32)
     return bp, apply, X
 
 
@@ -111,6 +111,66 @@ def test_harden_device_noop_when_target_above_current():
     again = RE.harden_device(frozen, 0.9, use_inf=False)   # nothing to do
     np.testing.assert_array_equal(np.asarray(frozen[("w",)]["hard"]),
                                   np.asarray(again[("w",)]["hard"]))
+
+
+# -- canonical chunked gradient association ----------------------------------
+
+def test_grad_chunk_count():
+    """C = gcd(gcd(bs, CANONICAL_LANE_CHUNKS), pool): a pure function of
+    the minibatch and pool sizes, never of the device count, capped so the
+    sharded exchange stays O(C x |params|)."""
+    assert RE.CANONICAL_LANE_CHUNKS == 8
+    assert RE.grad_chunk_count(4, 8) == 4
+    assert RE.grad_chunk_count(8, 8) == 8
+    assert RE.grad_chunk_count(16, 16) == 8     # capped: 2 lanes per chunk
+    assert RE.grad_chunk_count(32, 32) == 8     # capped: 4 lanes per chunk
+    assert RE.grad_chunk_count(7, 8) == 1       # odd batch: single chunk
+    assert RE.grad_chunk_count(12, 12) == 4
+    assert RE.grad_chunk_count(8, 12) == 4      # pool limits the grid too
+
+
+def test_draw_index_plan_stratified_over_chunk_shards():
+    """Chunk j of every step's minibatch draws only from pool shard j
+    (rows [j*N/C, (j+1)*N/C)) without replacement — the property that lets
+    the sharded engine read every minibatch row from its own pool shard."""
+    N, bs, steps = 16, 16, 7
+    C = RE.grad_chunk_count(bs, N)
+    c, Ns = bs // C, N // C
+    plan = RE.draw_index_plan(N, bs, steps, seed=3)
+    assert plan.shape == (steps, bs) and plan.dtype == np.int32
+    for t in range(steps):
+        for j in range(C):
+            chunk = plan[t, j * c:(j + 1) * c]
+            assert chunk.min() >= j * Ns and chunk.max() < (j + 1) * Ns
+            assert len(set(chunk.tolist())) == c      # no replacement
+    # pure function of (N, bs, steps, seed): identical on every call site
+    np.testing.assert_array_equal(plan, RE.draw_index_plan(N, bs, steps,
+                                                           seed=3))
+
+
+def test_canonical_grad_matches_engine_chunking():
+    """make_canonical_grad with the canonical chunk count reproduces the
+    engine's two-level reduction bit-for-bit for a toy loss."""
+    def loss_fn(tr, frozen, xb, yb, auxb):
+        return jnp.mean(jnp.square(xb @ tr["w"] - yb))
+
+    rng = np.random.default_rng(0)
+    tr = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    xb = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    yb = jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)
+    C = RE.grad_chunk_count(16, 16)
+    lv, g = RE.make_canonical_grad(loss_fn, chunks=C)(tr, None, xb, yb, None)
+    # manual two-level association: per-chunk same-shape ordered lane sums,
+    # then one ordered sum over the stacked chunk partials in chunk order
+    lanes_l, lanes_g = RE.make_per_sample_grad(loss_fn)(tr, None, xb, yb,
+                                                        None)
+    c = 16 // C
+    lp = jnp.sum(jnp.reshape(lanes_l, (C, c)), axis=1)
+    gp = jnp.sum(jnp.reshape(lanes_g["w"], (C, c, 4, 3)), axis=1)
+    np.testing.assert_array_equal(np.asarray(lv),
+                                  np.asarray(jnp.sum(lp) / 16))
+    np.testing.assert_array_equal(np.asarray(g["w"]),
+                                  np.asarray(jnp.sum(gp, axis=0) / 16))
 
 
 # -- (b) full-block bit-for-bit parity ---------------------------------------
@@ -252,12 +312,12 @@ def _assert_meta_equal(a, b, *, what):
             err_msg=f"{what}: folded scale diverged at {p}")
 
 
-def _run_both(engines, kwargs, *, seed=11, aux_seed=None, bs):
-    bp, apply, X = two_linear_block(seed=seed)
+def _run_both(engines, kwargs, *, seed=11, aux_seed=None, bs, n_samples=8):
+    bp, apply, X = two_linear_block(seed=seed, n_samples=n_samples)
     aux = None
     if aux_seed is not None:
         rng = np.random.default_rng(aux_seed)
-        aux = (rng.normal(size=(8, 6, 64)) * 0.1).astype(np.float32)
+        aux = (rng.normal(size=(n_samples, 6, 64)) * 0.1).astype(np.float32)
     Y = np.asarray(apply(bp, jnp.asarray(X),
                          jnp.asarray(aux) if aux is not None else None))
     _, qmeta = quantize_block_rtn(bp, QCFG)
@@ -325,6 +385,83 @@ def test_sharded_engine_three_way_multidevice():
                        what="device vs reference")
     _assert_meta_equal(metas["device"], metas["sharded"],
                        what="sharded vs device")
+
+
+def test_chunked_association_bit_for_bit_single_device():
+    """bs=16 over a 16-sample pool puts MULTIPLE lanes in each canonical
+    chunk (C=8, 2 lanes/chunk): the two-level association must still match
+    reference vs device bit-for-bit on one device."""
+    assert RE.grad_chunk_count(16, 16) == 8
+    metas = _run_both({"reference": None, "device": None}, {}, seed=13,
+                      bs=16, n_samples=16)
+    _assert_meta_equal(metas["reference"], metas["device"],
+                       what="chunked: device vs reference")
+
+
+def test_chunked_association_three_way_multidevice():
+    """The chunked-reduction acceptance contract at dp>1: with bs=16 over a
+    16-sample pool each device reduces 2 lanes into its local chunk partial
+    before the fused exchange.  Same-program engines (reference vs device)
+    agree bit-for-bit on everything; the cross-program sharded comparison
+    pins the DISCRETE artifacts (hardened mask + packed codes) bit-for-bit
+    with folded scales within 1e-5 — with multi-lane chunks XLA may lower
+    the within-chunk reduce marginally differently for the local shard
+    than for the full stack (the engine's documented ~1-ulp cross-program
+    noise, which only the continuous state sees)."""
+    mesh = _multidevice_mesh()
+    if RE.grad_chunk_count(16, 16) % dp_size(mesh):
+        pytest.skip("DP degree must divide the canonical chunk count")
+    metas = _run_both({"reference": None, "device": None, "sharded": mesh},
+                      {}, seed=13, bs=16, n_samples=16)
+    _assert_meta_equal(metas["reference"], metas["device"],
+                       what="chunked: device vs reference")
+    for p in metas["device"]:
+        np.testing.assert_array_equal(
+            np.asarray(metas["device"][p]["hard"]),
+            np.asarray(metas["sharded"][p]["hard"]),
+            err_msg=f"chunked: hardened mask diverged at {p}")
+        np.testing.assert_array_equal(
+            np.asarray(metas["device"][p]["codes"]),
+            np.asarray(metas["sharded"][p]["codes"]),
+            err_msg=f"chunked: codes diverged at {p}")
+        np.testing.assert_allclose(
+            np.asarray(metas["device"][p]["scale"]),
+            np.asarray(metas["sharded"][p]["scale"]), rtol=1e-5,
+            err_msg=f"chunked: folded scale drifted beyond 1e-5 at {p}")
+
+
+def test_stage_plan_shards_streams_by_dp_degree():
+    """With a mesh, staged calibration streams are batch-sharded over the
+    DP axes: every device holds exactly N/D rows — per-device stream bytes
+    shrink by the DP degree versus the replicated baseline."""
+    mesh = _multidevice_mesh()
+    D = dp_size(mesh)
+    if 16 % D:
+        pytest.skip("16-sample pool must divide by the DP degree")
+    bp, apply, X = two_linear_block(seed=14, n_samples=16)
+    Y = np.asarray(apply(bp, jnp.asarray(X), None))
+    plan = RE.stage_plan(X, Y, batch_size=8, total_steps=2, mesh=mesh)
+    per_device = {}
+    for arr in (plan.X, plan.Y):
+        for s in arr.addressable_shards:
+            assert s.data.shape[0] == arr.shape[0] // D, \
+                f"expected a 1/{D} batch shard, got {s.data.shape}"
+            per_device[s.device] = per_device.get(s.device, 0) \
+                + s.data.nbytes
+    replicated = plan.X.nbytes + plan.Y.nbytes
+    assert max(per_device.values()) * D == replicated
+    # the index plan stays replicated (it is tiny) and the plan still runs
+    eng = RE.ReconstructionEngine(
+        TQ._make_loss_fn(apply, QCFG, TQ.TesseraQConfig()),
+        TQ.AdamW(lr=1e-3), mesh=mesh)
+    _, qmeta = quantize_block_rtn(bp, QCFG)
+    states = {p: TQ._leaf_state(TQ.get_path(bp, p), qmeta[p], QCFG)
+              for p in qmeta}
+    tr = TQ._trainables(states, True)
+    frozen = {p: {k: v for k, v in st.items() if k not in ("nu", "v")}
+              for p, st in states.items()}
+    tr, _, lv = eng.run(tr, eng.init(tr), {"bp": bp, "sts": frozen}, plan)
+    assert np.isfinite(float(lv))
 
 
 def test_sharded_engine_batch_divisibility_error():

@@ -67,6 +67,40 @@ def test_checkpoint_retention_and_latest(tmp_path):
     assert len([d for d in dirs if d.startswith("step_")]) == 2
 
 
+def test_checkpoint_retention_ignores_torn_dirs(tmp_path):
+    """Torn step dirs (no MANIFEST.json) must not count toward ``keep``:
+    with keep=2 and two newer torn dirs, the keep-N GC used to delete the
+    only two COMPLETE checkpoints and retain the unusable torn ones."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, tree())
+    # two torn dirs NEWER than every complete step (crash on a filesystem
+    # whose replace wasn't atomic)
+    os.makedirs(tmp_path / "step_00000003")
+    os.makedirs(tmp_path / "step_00000004")
+    mgr.save(2, tree())                      # triggers _gc
+    assert mgr.latest_step() == 2
+    # both complete checkpoints survive and restore
+    _, got = mgr.restore_latest(jax.tree_util.tree_map(jnp.zeros_like,
+                                                       tree()))
+    assert got is not None
+    assert (tmp_path / "step_00000001").exists()
+    assert (tmp_path / "step_00000002" / "MANIFEST.json").exists()
+
+
+def test_checkpoint_gc_sweeps_stale_torn_dirs(tmp_path):
+    """Torn dirs OLDER than the newest complete step are garbage from a
+    past crash: GC removes them; newer ones are left for latest_step to
+    ignore (they may be a concurrent writer mid-flight)."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    os.makedirs(tmp_path / "step_00000001")          # stale torn
+    mgr.save(2, tree())
+    os.makedirs(tmp_path / "step_00000009")          # newer torn
+    mgr.save(3, tree())                              # triggers _gc
+    assert not (tmp_path / "step_00000001").exists()
+    assert (tmp_path / "step_00000009").exists()
+    assert mgr.latest_step() == 3
+
+
 def test_checkpoint_ignores_partial_writes(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree())
