@@ -30,7 +30,9 @@ bench-smoke:
 	$(PY) -m benchmarks.recon_speed --dryrun
 
 # serving-path speed bench (Table 8 axis): FP baseline + packed W2/W3/W4
-# under both kernel backends, with a cross-backend logits parity gate;
+# under both kernel backends, with a cross-backend logits parity gate,
+# plus the heterogeneous-workload continuous-batching section (scheduler
+# goodput >= lock-step and bit-identity-to-standalone gates per backend);
 # emits BENCH_serve.json (the CI serving-perf trajectory artifact)
 bench-serve:
 	$(PY) -m benchmarks.serve_speed

@@ -95,3 +95,16 @@ def evaluate(cfg, params, tasks=None):
 
 def emit(table: str, name: str, metric: str, value, t_us: float = 0.0):
     print(f"{table},{name},{metric},{value},{t_us:.1f}")
+
+
+def gate(out: dict, name: str, *, threshold, measured, ok, cmp) -> bool:
+    """One machine-readable gate record appended to ``out["gates"]`` — THE
+    shared schema ({name, threshold, measured, ok, cmp}) every bench
+    artifact (BENCH_recon.json, BENCH_serve.json) uses; a bench run must
+    fail if any gate is not ok."""
+    out["gates"].append({"name": name, "threshold": float(threshold),
+                         "measured": float(measured), "ok": bool(ok),
+                         "cmp": cmp})
+    print(f"gate: {name}: {'PASS' if ok else 'FAIL'} "
+          f"(measured {measured:.4g}, want {cmp} {threshold:.4g})")
+    return bool(ok)

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, gate as _gate
 from repro.configs import get_reduced_config
 from repro.configs.base import QuantConfig
 from repro.core import recon_engine as RE
@@ -148,16 +148,6 @@ def stream_bytes_per_device(plan: "RE.BatchPlan") -> int:
         for s in arr.addressable_shards:
             per[s.device] = per.get(s.device, 0) + s.data.nbytes
     return max(per.values())
-
-
-def _gate(out, name, *, threshold, measured, ok, cmp):
-    """One machine-readable gate record; the run fails if any is not ok."""
-    out["gates"].append({"name": name, "threshold": float(threshold),
-                         "measured": float(measured), "ok": bool(ok),
-                         "cmp": cmp})
-    print(f"gate: {name}: {'PASS' if ok else 'FAIL'} "
-          f"(measured {measured:.4g}, want {cmp} {threshold:.4g})")
-    return bool(ok)
 
 
 def main(argv=None):

@@ -8,6 +8,8 @@ objective  || (X/s_ch) Q(W*s_ch) - X W ||_F^2  on a captured token subsample.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -48,6 +50,14 @@ def awq_leaf(w, stats, qcfg: QuantConfig):
             if err < best[2]:
                 best = (alpha, clip, err)
     alpha, clip, _ = best
+    if alpha is None:
+        # every (alpha, clip) candidate scored non-finite (degenerate
+        # capture stats — NaN/inf activations); fall back to the identity
+        # transform instead of crashing in _act_scale(mean_abs, None)
+        warnings.warn("awq_leaf: grid search found no finite candidate "
+                      "(degenerate capture stats); falling back to "
+                      "alpha=0.0, clip=1.0")
+        alpha, clip = 0.0, 1.0
     s_ch = _act_scale(stats.mean_abs, alpha)
     wt = jnp.asarray(wf * s_ch[..., :, None])
     scale, zero = Q.compute_scale_zero(wt, qcfg, gamma=clip, beta=clip)

@@ -19,8 +19,21 @@ PERCDAMP = 0.01
 BLOCK = 128
 
 
-def _gptq_matrix(W: np.ndarray, H: np.ndarray, qcfg: QuantConfig) -> np.ndarray:
-    """W: (in, out) fp32; H: (in, in).  Returns fake-quantized W_hat."""
+def _gptq_matrix(W: np.ndarray, H: np.ndarray, qcfg: QuantConfig, *,
+                 stale_group_scales: bool = False):
+    """W: (in, out) fp32; H: (in, in).
+
+    Returns ``(W_hat, scales, zeros, codes)``: the fake-quantized weight,
+    per-group scale/zero (n_groups, out) and integer codes (in, out).
+
+    Group scale/zero are computed from the error-COMPENSATED weights.  For a
+    group starting mid-block (group_size < BLOCK) that means reading the
+    current block's working copy ``Wb`` — ``Whin`` only receives the
+    in-block compensation at block end, so reading it mid-block would use
+    scales computed from stale rows (matching reference GPTQ, which updates
+    its working matrix in place as it walks the block).
+    ``stale_group_scales=True`` reproduces the old stale behavior; it exists
+    only so the regression test can pin fixed <= stale."""
     n_in, n_out = W.shape
     g = Q.resolve_group(n_in, qcfg.group_size)
     W = W.copy()
@@ -57,8 +70,13 @@ def _gptq_matrix(W: np.ndarray, H: np.ndarray, qcfg: QuantConfig) -> np.ndarray:
         for j in range(i2 - i1):
             col = i1 + j
             if col % g == 0:
-                # fresh scale/zero for this group from the *current* weights
-                seg = Whin[col:col + g]
+                # fresh scale/zero for this group from the *current* weights:
+                # in-block rows come from the compensated working copy Wb,
+                # rows spilling past the block from Whin (best available)
+                seg = Whin[col:col + g].copy()
+                if not stale_group_scales:
+                    in_blk = min(i2, col + g) - col
+                    seg[:in_blk] = Wb[j:j + in_blk]
                 s, z = Q.compute_scale_zero(jnp.asarray(seg), qcfg)
                 scale, zero = np.asarray(s)[0], np.asarray(z)[0]
                 scales[col // g], zeros[col // g] = scale, zero

@@ -98,7 +98,10 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
                 f"chunk count gcd(batch={bs}, pool={n_pool}, "
                 f"cap={re_mod.CANONICAL_LANE_CHUNKS}) must be a multiple "
                 f"of {D} — use a calibration pool whose size is a multiple "
-                "of the DP degree (or shrink the mesh)")
+                "of the DP degree, or set recon_engine.CANONICAL_LANE_CHUNKS "
+                "to a multiple of the DP degree (required for DP degrees "
+                f"that do not divide {re_mod.CANONICAL_LANE_CHUNKS}, e.g. "
+                "6-way), or shrink the mesh")
         tcfg = dataclasses.replace(tcfg, mesh=mesh, batch_size=bs)
     stages = build_stages(cfg, ctx)
     params_q = params

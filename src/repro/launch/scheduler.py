@@ -1,0 +1,327 @@
+"""Slot-based continuous-batching request scheduler (the real serve loop).
+
+``launch/serve.py``'s old loop decoded every request in lock-step for a fixed
+``gen``: no completion, no admission, every heterogeneous batch paid for its
+longest member.  This module is the scheduler that docstring promised:
+
+  * a FIFO **request queue** with per-request arrival times (decode-step
+    units, from a seeded plan — see :func:`make_workload`);
+  * a fixed number of **slots**, each owning one lane of the batched cache
+    (``models.common.write_slot`` moves a prefilled request's state into its
+    slot; the cache layout contract is slot == axis 1 on every leaf, which
+    every family's ``init_cache`` obeys);
+  * **ragged lengths**: each request prefills at its true prompt length
+    (batch-of-1, one jit specialization per distinct length) and decodes
+    until its own token budget, not the batch max;
+  * **completion masking**: a finished slot's token, write cursor and KV
+    state are frozen on device (``launch.steps.make_sched_steps``) and its
+    logits are never recorded again;
+  * **admission mid-decode**: a freed slot is handed the next queued request
+    without stopping the other slots;
+  * a **compile-once decode step**: fixed slot count, occupancy as a traced
+    bool vector — the jit cache stays at one entry across every occupancy
+    change (pinned by ``tests/test_scheduler.py``).
+
+The decode loop is sync-free: completions are token-budget driven (host-known
+at admission), so the only host round-trips are one per admission (the first
+generated token) and one final sync.  Per-step token/logit device arrays are
+fetched after the loop ends.
+
+Per-request outputs are bit-identical to serving the same request alone
+through ``serve_requests`` at the same cache width: active rows see exactly
+the arguments the plain loop passes, and every op in the decode path is
+batch-row independent.  (Exception: MoE capacity dispatch couples rows by
+construction — tokens compete for per-expert capacity slots — so MoE gets
+determinism, not alone-parity.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import cache_donate_argnums, make_sched_steps
+from repro.models.common import write_slot
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One queued generation request.
+
+    ``arrival`` is in scheduler-clock units (decode steps): the request is
+    admissible once the scheduler has dispatched that many decode steps.
+    ``extras`` carries additional per-request prefill inputs for multimodal
+    families (``frames`` for encdec, ``patches`` for vlm), unbatched.
+    """
+    rid: int
+    prompt: np.ndarray                  # (plen,) int32
+    max_new_tokens: int
+    arrival: int = 0
+    extras: Optional[Dict[str, np.ndarray]] = None
+
+
+def _push(host_arr: np.ndarray):
+    """Host->device transfer of a buffer the scheduler will keep MUTATING.
+
+    jax's CPU client zero-copies 64-byte-aligned numpy buffers into device
+    arrays (alignment is allocator luck for small arrays), so handing it
+    ``active_h`` directly would let later in-place mutations retroactively
+    corrupt the mask a dispatched step still references — a sporadic,
+    alignment-dependent heisenbug.  Always transfer a private copy that
+    nothing ever writes again."""
+    return jnp.asarray(host_arr.copy())
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedSteps:
+    """Jitted step set for one (arch, max_seq, backend, act_bits) config."""
+    model: Any
+    prefill: Any
+    decode: Any                         # (params, cache, tok, pos, active)
+    write_slot: Any
+
+
+def make_workload(vocab_size: int, *, n_requests: int, seed: int,
+                  prompt_lens=(8, 32), budgets=(2, 24),
+                  mean_gap: float = 1.0) -> List[Request]:
+    """Seeded heterogeneous request plan: mixed prompt lengths, mixed token
+    budgets, Poisson inter-arrival gaps in decode-step units.  A pure
+    function of its arguments, so the same seed yields the same plan on
+    every run — the admission-determinism tests and the bench gate both
+    lean on that."""
+    rng = np.random.default_rng(seed)
+    t = 0
+    reqs = []
+    for rid in range(n_requests):
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        budget = int(rng.integers(budgets[0], budgets[1] + 1))
+        prompt = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=budget,
+                            arrival=t))
+        t += int(rng.poisson(mean_gap))
+    return reqs
+
+
+def _prefill_len(cfg: ModelConfig, req: Request) -> int:
+    """Cache positions a request's prefill consumes: its prompt, plus the
+    image-patch prefix for VLMs (patches share the decoder cache)."""
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    return len(req.prompt) + extra
+
+
+def compile_sched_steps(cfg: ModelConfig, *, max_seq: int,
+                        kernel_backend=None, act_bits=None) -> SchedSteps:
+    """Jit-wrap the scheduler's step set ONCE per serving configuration.
+    Reuse the result across runs/repeats — rebuilding retraces."""
+    model, pstep, dstep = make_sched_steps(cfg, None, max_seq=max_seq,
+                                           act_bits=act_bits,
+                                           kernel_backend=kernel_backend)
+    return SchedSteps(
+        model=model,
+        prefill=jax.jit(pstep),
+        decode=jax.jit(dstep, donate_argnums=cache_donate_argnums(1)),
+        write_slot=jax.jit(write_slot,
+                           donate_argnums=cache_donate_argnums(0)))
+
+
+def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
+                    slots: int, max_seq: Optional[int] = None,
+                    kernel_backend=None, act_bits=None,
+                    collect_logits: bool = False,
+                    compiled: Optional[SchedSteps] = None) -> dict:
+    """Serve ``requests`` through the slot scheduler.
+
+    Returns per-request results keyed by rid (``tokens`` is exactly
+    ``max_new_tokens`` long: the prefill token plus its decode steps) and
+    aggregate stats.  ``decode_tok_s`` counts USEFUL tokens only — every
+    request's own budget, which is also the number actually generated; the
+    lock-step baseline reports the same numerator so the two compose into
+    an apples-to-apples goodput gate."""
+    if slots < 1:
+        raise ValueError(f"need at least one slot, got {slots}")
+    order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if max_seq is None:
+        max_seq = max(_prefill_len(cfg, r) + r.max_new_tokens
+                      for r in order)
+    for r in order:
+        if r.max_new_tokens < 1:
+            raise ValueError(f"request {r.rid}: max_new_tokens must be >= 1")
+        if _prefill_len(cfg, r) + r.max_new_tokens > max_seq:
+            raise ValueError(
+                f"request {r.rid}: prefill length ({_prefill_len(cfg, r)}) "
+                f"+ budget ({r.max_new_tokens}) exceeds max_seq ({max_seq})")
+    steps_ = compiled if compiled is not None else compile_sched_steps(
+        cfg, max_seq=max_seq, kernel_backend=kernel_backend,
+        act_bits=act_bits)
+    model = steps_.model
+
+    cache = model.init_cache(slots, max_seq)
+    tok = jnp.zeros((slots,), jnp.int32)
+    pos = jnp.zeros((slots,), jnp.int32)
+    active_h = np.zeros((slots,), bool)        # host mirror of occupancy
+    active_d = _push(active_h)
+    slot_rid = np.full((slots,), -1, np.int64)
+    remaining = np.zeros((slots,), np.int64)   # decode steps left per slot
+    res = {r.rid: {"arrival": r.arrival, "admit_step": None,
+                   "finish_step": None, "tokens": [], "logits": []}
+           for r in order}
+    pending = deque(order)
+    trace = []            # (active snapshot, slot->rid snapshot, tok, logits)
+    t = 0                 # scheduler clock, in decode steps dispatched
+    steps = 0
+    occupancy_acc = 0
+    prefill_secs = 0.0
+    t_start = time.time()
+
+    while pending or active_h.any():
+        # ---- admission: queued requests into free slots -------------------
+        dirty = False
+        while (pending and pending[0].arrival <= t
+               and not active_h.all()):
+            req = pending.popleft()
+            s = int(np.flatnonzero(~active_h)[0])
+            tp0 = time.time()
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            for k, v in (req.extras or {}).items():
+                batch[k] = jnp.asarray(v[None])
+            c1 = model.init_cache(1, max_seq)
+            lg1, c1 = steps_.prefill(params, batch, c1)
+            tok0 = int(jnp.argmax(lg1[0], -1))   # the only per-admission sync
+            cache = steps_.write_slot(cache, c1, s)
+            tok = tok.at[s].set(tok0)
+            pos = pos.at[s].set(_prefill_len(cfg, req))
+            # the argmax sync above already drained the dispatch queue, so
+            # blocking here charges ONLY the slot install to the admission
+            # window instead of letting it leak into decode_secs
+            jax.block_until_ready(cache)
+            prefill_secs += time.time() - tp0
+            r = res[req.rid]
+            r["admit_step"] = t
+            r["tokens"].append(tok0)
+            if collect_logits:
+                # device array; fetched with the rest after the loop
+                r["logits"].append(lg1[0])
+            if req.max_new_tokens == 1:
+                r["finish_step"] = t             # done at prefill
+            else:
+                slot_rid[s] = req.rid
+                remaining[s] = req.max_new_tokens - 1
+                active_h[s] = True
+                dirty = True
+        if not active_h.any():
+            if not pending:
+                break
+            t = pending[0].arrival               # idle: jump to next arrival
+            continue
+        if dirty:
+            active_d = _push(active_h)
+        # ---- one masked decode step over every slot -----------------------
+        logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
+                                                active_d)
+        trace.append((active_h.copy(), slot_rid.copy(), tok,
+                      logits if collect_logits else None))
+        steps += 1
+        occupancy_acc += int(active_h.sum())
+        t += 1
+        # ---- budget completions (host-known, zero sync) -------------------
+        done = active_h & (remaining == 1)
+        remaining[active_h] -= 1
+        if done.any():
+            for s in np.flatnonzero(done):
+                res[slot_rid[s]]["finish_step"] = t
+                slot_rid[s] = -1
+            active_h[done] = False
+            active_d = _push(active_h)
+
+    tok.block_until_ready()                      # close the timed region
+    total_secs = time.time() - t_start
+    decode_secs = max(total_secs - prefill_secs, 1e-9)
+
+    # ---- reconstruct per-request streams (host transfers OFF the clock) ---
+    for mask, rids, tok_d, lg_d in trace:
+        tok_np = np.asarray(tok_d)
+        lg_np = np.asarray(lg_d, np.float32) if lg_d is not None else None
+        for s in np.flatnonzero(mask):
+            r = res[rids[s]]
+            r["tokens"].append(int(tok_np[s]))
+            if lg_np is not None:
+                r["logits"].append(lg_np[s])
+
+    useful = 0
+    latencies = []
+    for r in order:
+        rr = res[r.rid]
+        rr["tokens"] = np.asarray(rr["tokens"], np.int32)
+        assert rr["tokens"].shape == (r.max_new_tokens,)
+        rr["logits"] = (np.stack([np.asarray(a, np.float32)
+                                  for a in rr["logits"]], 0)
+                        if rr["logits"] else None)
+        rr["latency_steps"] = rr["finish_step"] - rr["arrival"]
+        latencies.append(rr["latency_steps"])
+        useful += r.max_new_tokens
+    lat = np.asarray(latencies, np.float64)
+    decode_tokens = useful - len(order)          # first tokens come from prefill
+    return {
+        "requests": res,
+        "slots": slots, "max_seq": max_seq, "steps": steps,
+        "useful_tokens": useful, "decode_tokens": decode_tokens,
+        "prefill_secs": prefill_secs, "decode_secs": decode_secs,
+        "decode_tok_s": decode_tokens / decode_secs,
+        "occupancy": (occupancy_acc / (steps * slots)) if steps else 0.0,
+        "latency_steps": {
+            "mean": float(lat.mean()), "p50": float(np.percentile(lat, 50)),
+            "p90": float(np.percentile(lat, 90)),
+            "p99": float(np.percentile(lat, 99)),
+        },
+    }
+
+
+def serve_lockstep(cfg: ModelConfig, model, params, requests: List[Request],
+                   *, slots: int, kernel_backend=None, act_bits=None,
+                   compiled=None, pad_id: int = 0) -> dict:
+    """The pre-scheduler serve loop as a baseline, at the SAME cache width.
+
+    FCFS static batching: requests are grouped ``slots`` at a time in
+    arrival order; each batch pads every prompt to the batch max length and
+    decodes in lock-step for the batch max budget — short requests pay for
+    the batch's longest member, and padded rows decode garbage (exactly the
+    deficiency the scheduler fixes; this baseline exists to be measured
+    against, its outputs are not parity-gated).  Arrival gaps are ignored,
+    which only flatters the baseline."""
+    from repro.launch.serve import compile_serve_steps, serve_requests
+    order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if compiled is None:
+        compiled = compile_serve_steps(cfg, kernel_backend=kernel_backend,
+                                       act_bits=act_bits)
+    prefill_secs = decode_secs = 0.0
+    raw_decode_tokens = 0
+    for i in range(0, len(order), slots):
+        group = order[i:i + slots]
+        plen = max(len(r.prompt) for r in group)
+        gen = max(r.max_new_tokens for r in group)
+        prompts = np.full((len(group), plen), pad_id, np.int32)
+        for j, r in enumerate(group):
+            prompts[j, :len(r.prompt)] = r.prompt
+        st = serve_requests(cfg, model, params, prompts, gen=gen,
+                            compiled=compiled, collect_logits=False)
+        prefill_secs += st["prefill_secs"]
+        decode_secs += st["decode_secs"]
+        raw_decode_tokens += len(group) * (gen - 1)
+    useful = sum(r.max_new_tokens for r in order)
+    decode_tokens = useful - len(order)
+    decode_secs = max(decode_secs, 1e-9)
+    return {
+        "slots": slots, "useful_tokens": useful,
+        "decode_tokens": decode_tokens,
+        "raw_decode_tokens": raw_decode_tokens,
+        "wasted_decode_tokens": raw_decode_tokens - decode_tokens,
+        "prefill_secs": prefill_secs, "decode_secs": decode_secs,
+        # useful-token goodput: same numerator the scheduler reports
+        "decode_tok_s": decode_tokens / decode_secs,
+    }

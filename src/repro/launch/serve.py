@@ -9,9 +9,17 @@ params (the fp16 baseline every Table 8 comparison is against);
 ``--backend pallas`` routes every QTensor matmul through the fused Pallas
 dequant-matmul kernel instead of the XLA unpack path.
 
-Implements continuous batched decode over a shared KV cache: all requests
-prefill together (ragged lengths via per-request positions), then decode
-step-by-step; finished requests are masked out.
+Two serve loops ship here:
+
+* ``serve_requests`` — the UNIFORM lock-step loop: one batch, one shared
+  prompt length, a fixed ``gen`` for every row, no completion or admission.
+  It is the right tool for homogeneous benches (and is the bit-identical
+  parity anchor the serving benchmarks pin), and the wrong tool for
+  heterogeneous traffic — every request pays for the batch's longest.
+* ``--slots N`` routes serving through the slot-based continuous-batching
+  scheduler (``repro.launch.scheduler``): per-request prompt lengths and
+  token budgets, completion masking, admission of queued requests into
+  freed slots mid-decode, one compile of the masked decode step.
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ from repro.core import pack_model, quantize_model, quantized_memory_report
 from repro.core.qtensor import PACK_FACTOR
 from repro.core.tesseraq import TesseraQConfig
 from repro.data.pipeline import DataConfig, SyntheticCorpus, calibration_batches
-from repro.launch.steps import make_serve_steps
+from repro.launch.steps import cache_donate_argnums, make_serve_steps
 from repro.models import get_model
 
 _QUANT_RE = re.compile(r"W(\d+)A(\d+)(?:g(\d+))?$")
@@ -91,13 +99,14 @@ def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None):
     the timings would measure XLA, not serving."""
     _, prefill_step, decode_step = make_serve_steps(
         cfg, None, act_bits=act_bits, kernel_backend=kernel_backend)
-    return jax.jit(prefill_step), jax.jit(decode_step, donate_argnums=(1,))
+    return (jax.jit(prefill_step),
+            jax.jit(decode_step, donate_argnums=cache_donate_argnums(1)))
 
 
 def serve_requests(cfg, model, params, prompts, *, gen: int,
                    kernel_backend=None, act_bits=None, compiled=None,
-                   collect_logits=True) -> dict:
-    """Prefill + step-wise continuous-batched decode.
+                   collect_logits=True, max_seq=None) -> dict:
+    """Prefill + lock-step batched decode (uniform lengths, fixed ``gen``).
 
     Returns {"tokens", "prefill_secs", "decode_secs", "prefill_tok_s",
     "decode_tok_s", "logits"} — logits is the (B, V) prefill output plus
@@ -105,9 +114,16 @@ def serve_requests(cfg, model, params, prompts, *, gen: int,
     (``collect_logits=False`` drops them for timing-only runs).
     ``compiled``: a ``compile_serve_steps`` pair to reuse (built fresh
     otherwise).  Device->host transfers happen OUTSIDE the timed loop —
-    the decode section times async step dispatch plus one final sync."""
+    the decode section times async step dispatch plus one final sync.
+    ``max_seq`` overrides the cache width (default: exactly prompt+gen);
+    the scheduler parity tests pass the scheduler's width so both runs
+    reduce over identical cache extents."""
     B, prompt_len = prompts.shape
-    max_seq = prompt_len + gen
+    if max_seq is None:
+        max_seq = prompt_len + gen
+    elif max_seq < prompt_len + gen:
+        raise ValueError(f"max_seq {max_seq} < prompt+gen "
+                         f"{prompt_len + gen}")
     pstep, dstep = compiled if compiled is not None else compile_serve_steps(
         cfg, kernel_backend=kernel_backend, act_bits=act_bits)
 
@@ -156,6 +172,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="serve through the continuous-batching scheduler "
+                         "with this many slots over a seeded heterogeneous "
+                         "workload (prompt lens up to --prompt-len, budgets "
+                         "up to --gen); default: uniform lock-step loop")
     ap.add_argument("--calib-samples", type=int, default=8)
     ap.add_argument("--par-iters", type=int, default=4)
     ap.add_argument("--par-steps", type=int, default=20)
@@ -176,13 +197,46 @@ def main(argv=None):
                              init=args.init, tcfg=tcfg,
                              calib_samples=args.calib_samples)
 
-    # ---- batched serving ----------------------------------------------------
+    act = qcfg.act_bits if args.method != "none" else None
+
+    if args.slots is not None:
+        # ---- scheduled serving (continuous batching) ------------------------
+        from repro.launch.scheduler import make_workload, serve_scheduled
+        if args.prompt_len < 1 or args.gen < 1:
+            raise SystemExit("--slots needs --prompt-len and --gen >= 1")
+        # clamp the plan ranges so small --prompt-len/--gen stay valid
+        # (rng.integers(lo, hi+1) requires lo <= hi)
+        reqs = make_workload(cfg.vocab_size, n_requests=args.requests,
+                             seed=args.seed,
+                             prompt_lens=(min(max(4, args.prompt_len // 4),
+                                              args.prompt_len),
+                                          args.prompt_len),
+                             budgets=(min(2, args.gen), args.gen))
+        sched = serve_scheduled(cfg, served, reqs, slots=args.slots,
+                                kernel_backend=qcfg.kernel_backend,
+                                act_bits=act)
+        lat = sched["latency_steps"]
+        print(f"[serve] scheduled {args.requests} requests over "
+              f"{args.slots} slots in {sched['steps']} decode steps "
+              f"({sched['useful_tokens']} useful tokens, occupancy "
+              f"{sched['occupancy']:.2f}, decode "
+              f"{sched['decode_tok_s']:.1f} tok/s, backend={args.backend})")
+        print(f"[serve] latency (decode steps): mean {lat['mean']:.1f} "
+              f"p50 {lat['p50']:.0f} p90 {lat['p90']:.0f} "
+              f"p99 {lat['p99']:.0f}")
+        for r in reqs[:4]:
+            rr = sched["requests"][r.rid]
+            print(f"  req{r.rid}: plen={len(r.prompt)} "
+                  f"budget={r.max_new_tokens} arrive@{r.arrival} "
+                  f"admit@{rr['admit_step']} finish@{rr['finish_step']} -> "
+                  f"{rr['tokens'][:8].tolist()}")
+        return 0
+
+    # ---- uniform lock-step serving ------------------------------------------
     corpus = SyntheticCorpus(data_cfg)
     prompts = corpus.batch(0)["tokens"][:, :args.prompt_len]
     stats = serve_requests(cfg, model, served, prompts, gen=args.gen,
-                           kernel_backend=qcfg.kernel_backend,
-                           act_bits=qcfg.act_bits if args.method != "none"
-                           else None)
+                           kernel_backend=qcfg.kernel_backend, act_bits=act)
     B, gen = args.requests, args.gen
     dt = stats["prefill_secs"] + stats["decode_secs"]
     print(f"[serve] {B} requests x {gen} tokens in {dt:.2f}s "

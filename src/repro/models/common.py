@@ -70,6 +70,37 @@ def layer_loop(step, carry, xs, unroll: bool):
     return carry, stacked
 
 
+# --------------------------------------------------------------------------
+# slot plumbing (continuous-batching scheduler)
+# --------------------------------------------------------------------------
+#
+# Every family's decode cache obeys one layout contract: leaves are stacked
+# (layers/sites, batch, ...) so the REQUEST slot dimension is axis 1 on every
+# leaf (KV caches, RWKV shift/wkv states, Mamba conv/ssm states, encdec
+# self/cross caches).  The scheduler relies on that contract to move a single
+# request's state in and out of a batched cache without knowing the family.
+
+CACHE_SLOT_AXIS = 1
+
+
+def write_slot(cache, slot_cache, slot):
+    """Insert a single-request cache (size 1 along axis 1) into ``slot`` of a
+    batched cache.  ``slot`` may be a traced int32 — shapes are static, so one
+    jit compilation covers every slot index and occupancy."""
+    def one(dst, src):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=CACHE_SLOT_AXIS)
+    return jax.tree_util.tree_map(one, cache, slot_cache)
+
+
+def read_slot(cache, slot):
+    """Extract slot ``slot`` as a batch-of-1 cache (inverse of write_slot)."""
+    def one(leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1,
+                                            axis=CACHE_SLOT_AXIS)
+    return jax.tree_util.tree_map(one, cache)
+
+
 def update_cache(cache_k, cache_v, k, v, pos):
     """Insert k,v (B, S_new, H, D) into caches (B, S_max, H, D) at ``pos``.
 

@@ -42,6 +42,23 @@ def test_awq_beats_rtn_on_skewed_acts(skewed_problem):
     assert meta["act_scale"] is not None
 
 
+def test_awq_degenerate_stats_fall_back(skewed_problem):
+    """NaN capture stats regression: when every (alpha, clip) grid candidate
+    scores a non-finite error, awq_leaf must fall back to the identity
+    transform (alpha=0, clip=1) with a warning instead of crashing in
+    ``_act_scale(mean_abs, None)``."""
+    _, W = skewed_problem
+    qcfg = QuantConfig(bits=4, group_size=16)
+    st = LinearStats()
+    bad = np.full((8, W.shape[0]), np.nan, np.float32)
+    st.update(bad, False)
+    with pytest.warns(UserWarning, match="no finite candidate"):
+        fq, meta = awq_leaf(W, st, qcfg)
+    assert np.isfinite(np.asarray(fq, np.float32)).all()
+    assert (meta["alpha"], meta["clip"]) == (0.0, 1.0)
+    np.testing.assert_allclose(np.asarray(meta["act_scale"]), 1.0)
+
+
 def test_gptq_beats_rtn(skewed_problem):
     X, W = skewed_problem
     qcfg = QuantConfig(bits=3, group_size=None)
@@ -51,6 +68,36 @@ def test_gptq_beats_rtn(skewed_problem):
     e_rtn = np.mean((X @ fq_rtn - y_ref) ** 2)
     e_gptq = np.mean((X @ np.asarray(fq_gptq, np.float32) - y_ref) ** 2)
     assert e_gptq < e_rtn
+
+
+def test_gptq_group_scales_use_compensated_rows():
+    """g < BLOCK regression: groups starting mid-block must compute their
+    scale/zero from the error-compensated working rows (``Wb``), not the
+    stale ``Whin`` rows that only receive the in-block compensation at
+    block end.  The fix changes the codes and must not reconstruct worse
+    than the stale variant."""
+    from repro.core.gptq import BLOCK, _gptq_matrix
+    g = 32
+    assert g < BLOCK                     # groups start mid-block
+    qcfg = QuantConfig(bits=3, group_size=g)
+    err_fixed = err_stale = 0.0
+    codes_changed = False
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        n_in, n_out, n = 2 * BLOCK, 48, 512
+        X = rng.normal(size=(n, n_in)).astype(np.float32)
+        X[:, :8] *= 15.0
+        W = rng.normal(size=(n_in, n_out)).astype(np.float32)
+        H = X.T @ X
+        y_ref = X @ W
+        fq_f, _, _, codes_f = _gptq_matrix(W, H, qcfg)
+        fq_s, _, _, codes_s = _gptq_matrix(W, H, qcfg,
+                                           stale_group_scales=True)
+        err_fixed += np.mean((X @ fq_f - y_ref) ** 2)
+        err_stale += np.mean((X @ fq_s - y_ref) ** 2)
+        codes_changed |= not np.array_equal(codes_f, codes_s)
+    assert codes_changed                 # the bug was live (codes moved)
+    assert err_fixed <= err_stale
 
 
 def test_gptq_codes_reconstruct_weights(skewed_problem):

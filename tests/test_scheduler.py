@@ -1,0 +1,260 @@
+"""Continuous-batching scheduler tests: slot cache plumbing, completion
+masking, admission determinism, compile-once decode, family coverage, and
+packed-backend parity (the serve-path acceptance gates in miniature)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.launch.scheduler import (Request, compile_sched_steps,
+                                    make_workload, serve_lockstep,
+                                    serve_scheduled)
+from repro.launch.serve import serve_requests
+from repro.models import get_model
+from repro.models.common import read_slot, write_slot
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_reduced_config("tinyllama-1.1b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def assert_alone_parity(cfg, m, params, reqs, sched, **serve_kw):
+    """Every scheduled request's tokens == serving it alone (same width)."""
+    for q in reqs:
+        alone = serve_requests(cfg, m, params, q.prompt[None],
+                               gen=q.max_new_tokens,
+                               max_seq=sched["max_seq"],
+                               collect_logits=False, **serve_kw)
+        np.testing.assert_array_equal(
+            alone["tokens"][0], sched["requests"][q.rid]["tokens"],
+            err_msg=f"rid {q.rid} diverged from standalone serving")
+
+
+# -- slot cache plumbing (models/common.py) ---------------------------------
+
+def test_write_read_slot_roundtrip(dense):
+    cfg, m, _ = dense
+    cache = m.init_cache(4, 12)
+    one = jax.tree_util.tree_map(
+        lambda leaf: jnp.ones(leaf.shape[:1] + (1,) + leaf.shape[2:],
+                              leaf.dtype),
+        m.init_cache(1, 12))
+    out = write_slot(cache, one, 2)
+    back = read_slot(out, 2)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the other slots stay untouched (zeros)
+    for s in (0, 1, 3):
+        for leaf in jax.tree_util.tree_leaves(read_slot(out, s)):
+            assert not np.asarray(leaf).any()
+
+
+# -- completion masking ------------------------------------------------------
+
+def test_finished_request_is_frozen(dense):
+    """A short request sharing slots with a long one gets EXACTLY its token
+    budget, matches standalone serving, and its stream is unchanged when
+    the engine keeps stepping for an even longer neighbor."""
+    cfg, m, params = dense
+    rng = np.random.default_rng(0)
+    short = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, (6,))
+                    .astype(np.int32), max_new_tokens=2)
+    long_ = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, (9,))
+                    .astype(np.int32), max_new_tokens=9)
+    sched = serve_scheduled(cfg, params, [short, long_], slots=2, max_seq=24)
+    assert sched["requests"][0]["tokens"].shape == (2,)
+    assert sched["requests"][1]["tokens"].shape == (9,)
+    assert_alone_parity(cfg, m, params, [short, long_], sched)
+    # stretch the neighbor: the finished request's stream must not move
+    longer = dataclasses.replace(long_, max_new_tokens=14)
+    sched2 = serve_scheduled(cfg, params, [short, longer], slots=2,
+                             max_seq=24)
+    np.testing.assert_array_equal(sched["requests"][0]["tokens"],
+                                  sched2["requests"][0]["tokens"])
+
+
+# -- admission ---------------------------------------------------------------
+
+def test_admission_determinism_and_alone_parity(dense):
+    """More requests than slots with staggered arrivals: the same seeded
+    plan reproduces the same tokens, and every request matches serving it
+    alone — admission into freed slots mid-decode is invisible to the
+    requests already decoding."""
+    cfg, m, params = dense
+    reqs = make_workload(cfg.vocab_size, n_requests=6, seed=3,
+                         prompt_lens=(4, 10), budgets=(2, 8))
+    assert len({len(r.prompt) for r in reqs}) > 1          # genuinely ragged
+    assert len({r.arrival for r in reqs}) > 1              # staggered
+    s1 = serve_scheduled(cfg, params, reqs, slots=2)
+    s2 = serve_scheduled(cfg, params, reqs, slots=2)
+    for q in reqs:
+        np.testing.assert_array_equal(s1["requests"][q.rid]["tokens"],
+                                      s2["requests"][q.rid]["tokens"])
+        assert s1["requests"][q.rid]["admit_step"] == \
+            s2["requests"][q.rid]["admit_step"]
+    assert_alone_parity(cfg, m, params, reqs, s1)
+    # queueing really happened: someone was admitted after its arrival
+    waits = [s1["requests"][q.rid]["admit_step"] - q.arrival for q in reqs]
+    assert max(waits) > 0
+    assert s1["latency_steps"]["p99"] >= s1["latency_steps"]["p50"]
+
+
+def test_uniform_workload_matches_lockstep_loop(dense):
+    """Parity anchor: on a UNIFORM workload (same prompt len, same budget,
+    all arrive at once, slots == requests) the scheduler reproduces the
+    plain lock-step ``serve_requests`` loop token-for-token."""
+    cfg, m, params = dense
+    rng = np.random.default_rng(1)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    gen = 4
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gen)
+            for i in range(3)]
+    sched = serve_scheduled(cfg, params, reqs, slots=3)
+    lock = serve_requests(cfg, m, params, prompts, gen=gen,
+                          max_seq=sched["max_seq"], collect_logits=False)
+    for i in range(3):
+        np.testing.assert_array_equal(lock["tokens"][i],
+                                      sched["requests"][i]["tokens"])
+
+
+# -- compile-once decode -----------------------------------------------------
+
+def test_decode_compiles_once_across_occupancy(dense):
+    """Occupancy is a traced mask: admissions, completions, and partially
+    empty steps must all reuse ONE decode executable."""
+    cfg, _, params = dense
+    reqs = make_workload(cfg.vocab_size, n_requests=5, seed=0,
+                         prompt_lens=(4, 8), budgets=(1, 6), mean_gap=2.0)
+    comp = compile_sched_steps(cfg, max_seq=14)
+    sched = serve_scheduled(cfg, params, reqs, slots=2, max_seq=14,
+                            compiled=comp)
+    assert sched["steps"] > 0
+    assert comp.decode._cache_size() == 1
+    # a second workload at the same config keeps reusing it
+    more = make_workload(cfg.vocab_size, n_requests=3, seed=9,
+                         prompt_lens=(4, 8), budgets=(2, 6))
+    serve_scheduled(cfg, params, more, slots=2, max_seq=14, compiled=comp)
+    assert comp.decode._cache_size() == 1
+
+
+# -- validation --------------------------------------------------------------
+
+def test_scheduler_validates_inputs(dense):
+    cfg, _, params = dense
+    r = Request(rid=0, prompt=np.zeros((4,), np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError, match="at least one slot"):
+        serve_scheduled(cfg, params, [r], slots=0)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        serve_scheduled(cfg, params, [r], slots=1, max_seq=6)
+    bad = Request(rid=1, prompt=np.zeros((4,), np.int32), max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        serve_scheduled(cfg, params, [bad], slots=1)
+
+
+# -- every family runs the scheduler ----------------------------------------
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_scheduler_family_alone_parity(arch):
+    """Row-independent families (attention, recurrence, hybrid): scheduled
+    tokens are bit-identical to serving each request alone."""
+    cfg = get_reduced_config(arch)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(1))
+    reqs = make_workload(cfg.vocab_size, n_requests=4, seed=1,
+                         prompt_lens=(4, 8), budgets=(2, 5))
+    sched = serve_scheduled(cfg, params, reqs, slots=2)
+    assert_alone_parity(cfg, m, params, reqs, sched)
+
+
+def test_scheduler_moe_deterministic():
+    """MoE capacity dispatch couples batch rows by construction, so MoE
+    gets a determinism contract rather than alone-parity."""
+    cfg = get_reduced_config("qwen3-moe-30b-a3b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(2))
+    reqs = make_workload(cfg.vocab_size, n_requests=4, seed=2,
+                         prompt_lens=(4, 8), budgets=(2, 5))
+    s1 = serve_scheduled(cfg, params, reqs, slots=2)
+    s2 = serve_scheduled(cfg, params, reqs, slots=2)
+    for q in reqs:
+        assert s1["requests"][q.rid]["tokens"].shape == (q.max_new_tokens,)
+        np.testing.assert_array_equal(s1["requests"][q.rid]["tokens"],
+                                      s2["requests"][q.rid]["tokens"])
+
+
+def test_scheduler_vlm_extras():
+    """Multimodal prefill inputs ride along per request via ``extras``."""
+    cfg = get_reduced_config("paligemma-3b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    reqs = []
+    for rid in range(3):
+        plen = int(rng.integers(4, 8))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 5)),
+            extras={"patches": rng.normal(size=(
+                cfg.num_patches, cfg.d_model)).astype(np.float32)}))
+    # patches occupy cache positions too: width must cover them
+    max_seq = max(cfg.num_patches + len(r.prompt) + r.max_new_tokens
+                  for r in reqs)
+    s1 = serve_scheduled(cfg, params, reqs, slots=2, max_seq=max_seq)
+    s2 = serve_scheduled(cfg, params, reqs, slots=2, max_seq=max_seq)
+    for q in reqs:
+        assert s1["requests"][q.rid]["tokens"].shape == (q.max_new_tokens,)
+        np.testing.assert_array_equal(s1["requests"][q.rid]["tokens"],
+                                      s2["requests"][q.rid]["tokens"])
+
+
+# -- packed QTensor backends -------------------------------------------------
+
+def test_scheduler_packed_backend_alone_parity(dense):
+    """The acceptance gate in miniature: scheduled outputs bit-identical to
+    serving alone on BOTH kernel backends, on packed W4 weights."""
+    from repro.configs.base import QuantConfig
+    from repro.core import pack_model, quantize_model
+    from repro.data.pipeline import DataConfig, calibration_batches
+    cfg, m, params = dense
+    qcfg = QuantConfig(bits=4, group_size=32)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=10, global_batch=2,
+                    seed=0)
+    calib = [{"tokens": jnp.asarray(b["tokens"][:, :-1])}
+             for b in calibration_batches(dc, 1, 2)]
+    pq, qmeta, _ = quantize_model(cfg, params, calib, qcfg, method="none",
+                                  init="rtn")
+    packed = pack_model(cfg, pq, qmeta, qcfg)
+    reqs = make_workload(cfg.vocab_size, n_requests=4, seed=4,
+                         prompt_lens=(4, 9), budgets=(2, 6))
+    for backend in ("xla", "pallas"):
+        sched = serve_scheduled(cfg, packed, reqs, slots=2,
+                                kernel_backend=backend)
+        assert_alone_parity(cfg, m, packed, reqs, sched,
+                            kernel_backend=backend)
+
+
+# -- lock-step baseline ------------------------------------------------------
+
+def test_lockstep_baseline_accounting(dense):
+    """The baseline pays for each batch's longest member; its waste and
+    useful-token accounting must line up with the scheduler's."""
+    cfg, m, params = dense
+    reqs = make_workload(cfg.vocab_size, n_requests=4, seed=5,
+                         prompt_lens=(4, 8), budgets=(2, 8))
+    lock = serve_lockstep(cfg, m, params, reqs, slots=2)
+    sched = serve_scheduled(cfg, params, reqs, slots=2)
+    assert lock["useful_tokens"] == sched["useful_tokens"] \
+        == sum(r.max_new_tokens for r in reqs)
+    assert lock["decode_tokens"] == sched["decode_tokens"]
+    assert lock["raw_decode_tokens"] >= lock["decode_tokens"]
+    assert lock["wasted_decode_tokens"] == \
+        lock["raw_decode_tokens"] - lock["decode_tokens"]

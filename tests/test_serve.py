@@ -52,6 +52,18 @@ def test_serve_cli_fp_baseline(capsys):
     assert "calibrating" not in out
 
 
+def test_serve_cli_scheduled(capsys):
+    """``--slots`` routes serving through the continuous-batching scheduler
+    over a seeded heterogeneous workload."""
+    rc = main(["--arch", "tinyllama-1.1b", "--reduced", "--method", "none",
+               "--requests", "4", "--prompt-len", "8", "--gen", "3",
+               "--slots", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "scheduled 4 requests over 2 slots" in out
+    assert "latency (decode steps)" in out
+
+
 @pytest.mark.slow
 def test_serve_cli_quantized(capsys):
     rc = main(["--arch", "tinyllama-1.1b", "--reduced", "--method",

@@ -55,6 +55,32 @@ def test_make_data_mesh_spans_all_devices():
     assert dp_size(make_data_mesh()) == len(jax.devices())
 
 
+def test_compressed_psum_matches_fp32_psum():
+    """``compressed_psum`` regression: it used to call ``jax.shard_map``
+    directly, which does not exist on the pinned jax 0.4.x (the exact
+    incompatibility ``shard_map_compat`` shims) — every call crashed with
+    AttributeError.  Now it must run on a pod mesh and reduce within int8
+    quantization error of the fp32 psum.  Runs 8-way under the CI
+    multidevice job; a 1-device mesh still covers the shim dispatch."""
+    from repro.launch.mesh import make_mesh
+    from repro.optim.compression import compressed_psum
+    D = len(jax.devices())
+    mesh = make_mesh((D,), ("pod",))
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(D * 2, 64)).astype(np.float32) * 3.0
+    out = np.asarray(compressed_psum(jax.numpy.asarray(x), mesh))
+    assert out.shape == x.shape
+    # every pod's block must hold the cross-pod sum of its block-position
+    blocks = x.reshape(D, 2, 64)
+    want = np.broadcast_to(blocks.sum(0), (D, 2, 64)).reshape(D * 2, 64)
+    # int8 wire error: <= half a quantization step per pod summand
+    tol = D * np.abs(x).max() / 127.0
+    np.testing.assert_allclose(out, want, atol=tol)
+    # parity on the single-pod mesh must be exact-ish even at int8
+    if D == 1:
+        np.testing.assert_allclose(out, x, atol=np.abs(x).max() / 127.0)
+
+
 def test_make_mesh_axis_name_defaults(monkeypatch):
     """Axis naming for 2- and 3-axis shapes without constructing devices."""
     import repro.launch.mesh as M
