@@ -25,7 +25,10 @@ CONTAINER_BITS = {2: 2, 3: 4, 4: 4, 8: 8}
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QTensor:
-    """Packed weight of logical shape ``shape`` = (..., in_features, out_features).
+    """Packed weight with logical shape ``shape`` — ALWAYS the 2-D
+    ``(in_features, out_features)`` of one weight matrix.  Leading stacked
+    dims (layers under lax.scan, experts) live on the ARRAYS, never in
+    ``shape`` (same contract as :meth:`dequantize`).
 
     ``packed``  uint8 (..., in_features // pack, out_features)
     ``scale``   float (..., n_groups, out_features)   (dequantization scale,

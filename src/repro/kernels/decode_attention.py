@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: slot-aware single-token decode attention.
+
+The continuous-batching scheduler keeps its KV cache slot-major on axis 1
+of every cache leaf (``models/common.CACHE_SLOT_AXIS``) and tracks which
+slots are live in an occupancy vector.  The XLA decode fast path computes
+dense (slots, heads, max_seq) scores and masks post-hoc — every retired or
+empty slot still pays full attention FLOPs and full cache reads.
+
+This kernel reads the cache-lane layout directly (k/v blocks are indexed
+``(b, c, h, 0)`` straight into the (slots, S, Hkv, D) cache — no transpose,
+no copy) and makes the occupancy vector and ragged per-slot lengths part of
+the kernel contract:
+
+  * ``active``: inactive slots skip ALL compute via ``@pl.when`` and emit
+    zeros (their accumulator never initializes past zero);
+  * ``kv_len``: K chunks entirely past a slot's ragged length are skipped,
+    so a slot at position 7 in a 4096-lane cache touches one chunk, not 32;
+  * online softmax (running max / sum in VMEM scratch) over the chunked K
+    axis, so max_seq never has to fit in one VMEM tile.
+
+Per-(slot, head) compute is a pure function of that slot's own lanes, which
+preserves the scheduler's bit-identity contract (scheduled tokens ==
+serving the request alone at the same max_seq).
+
+q layout: (B, Hkv, G, D) — GQA query groups folded next to their KV head so
+one q block rides along each (b, h) program.  k/v: (B, S, Hkv, D), the
+scheduler's native cache layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant_matmul import _CompilerParams
+
+_NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, act_ref, pos_ref, q_ref, k_ref, v_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *,
+                        csz: int, nc: int, scale: float):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    q_pos = pos_ref[0]
+
+    @pl.when((act_ref[0] > 0) & (c * csz < kv_len))
+    def _chunk():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)             # (csz, D)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = c * csz + jax.lax.broadcasted_iota(jnp.int32, (1, csz), 1)
+        s = jnp.where((kpos < kv_len) & (kpos <= q_pos), s, _NEG_INF)
+        m_prev = m_ref[:, :1]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[:, :1] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(c == nc - 1)
+    def _done():
+        # inactive slots never accumulate: l == 0, acc == 0 -> output zeros
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_len: jax.Array, q_pos: jax.Array,
+                     active: jax.Array | None = None,
+                     scale: float | None = None, chunk: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, D); k/v: (B, S, Hkv, D) — the scheduler cache layout,
+    slot dim on axis B(=0 here, axis 1 of the stacked cache), consumed
+    without transposition.  kv_len/q_pos: (B,) int32 ragged per-slot valid
+    length and query position.  active: (B,) bool occupancy, or None for
+    all-live (lockstep serving).
+
+    Returns (B, Hkv, G, D) in q.dtype; rows of inactive slots are zero.
+    """
+    B, Hkv, G, D = q.shape
+    S = k.shape[1]
+    if k.shape != (B, S, Hkv, D) or v.shape != (B, S, Hkv, D):
+        raise ValueError(f"cache-lane layout mismatch: q {q.shape} vs "
+                         f"k {k.shape} / v {v.shape}")
+    scale = float(D) ** -0.5 if scale is None else scale
+    csz = min(chunk, S)
+    nc = pl.cdiv(S, csz)
+    act = (jnp.ones((B,), jnp.int32) if active is None
+           else active.astype(jnp.int32))
+    kernel = functools.partial(_decode_attn_kernel, csz=csz, nc=nc,
+                               scale=scale)
+    smem = functools.partial(pl.BlockSpec, (1,), lambda b, h, c: (b,),
+                             memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nc),
+        in_specs=[
+            smem(), smem(), smem(),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, csz, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, csz, 1, D), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (col 0 live)
+            pltpu.VMEM((G, 128), jnp.float32),   # running sum (col 0 live)
+            pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), act, q_pos.astype(jnp.int32), q, k, v)

@@ -62,6 +62,47 @@ def _qmm_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _qmm_expert_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_ref, *,
+                       bits: int, nk: int, groups_per_tile: int):
+    """Expert-batched variant: every ref carries a leading singleton expert
+    dim and the K grid axis moves to program_id(3)."""
+    ppb = PACK_FACTOR[bits]
+    fbits = 8 // ppb
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_tile(p_ref[0], ppb, fbits)                 # (bk, bn)
+    bk, bn = codes.shape
+    g = bk // groups_per_tile
+    cg = codes.reshape(groups_per_tile, g, bn).astype(jnp.float32)
+    w = (cg - z_ref[0][:, None, :]) * s_ref[0][:, None, :]
+    w = w.reshape(bk, bn).astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[0], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _group_tile_index(bk: int, group_size: int):
+    """Scale/zero (rows_per_tile, row_index_fn(k)) for the two alignment
+    branches shared by the single and expert-batched kernels."""
+    if bk % group_size == 0:
+        # small groups: >=1 whole group per K tile, scale rows advance with k
+        return bk // group_size, lambda k: k
+    if group_size % bk == 0:
+        # large groups spanning several K tiles: each tile sits inside ONE
+        # group, so a single scale/zero row is fetched and the row index
+        # advances once every (group_size // bk) K steps
+        tiles_per_group = group_size // bk
+        return 1, lambda k: k // tiles_per_group
+    raise ValueError(f"bk={bk} and group_size={group_size} must divide "
+                     "one another")
+
+
 def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
                  zero: jax.Array, *, bits: int, group_size: int,
                  block_m: int = 256, block_n: int = 256, block_k: int = 512,
@@ -89,20 +130,8 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
             "operand together (see ops.quant_matmul_op)")
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    if bk % group_size == 0:
-        # small groups: >=1 whole group per K tile, scale rows advance with k
-        gpt = bk // group_size
-        sz_index = lambda i, j, k: (k, j)
-    elif group_size % bk == 0:
-        # large groups spanning several K tiles: each tile sits inside ONE
-        # group, so a single scale/zero row is fetched and the row index
-        # advances once every (group_size // bk) K steps
-        gpt = 1
-        tiles_per_group = group_size // bk
-        sz_index = lambda i, j, k: (k // tiles_per_group, j)
-    else:
-        raise ValueError(f"bk={bk} and group_size={group_size} must divide "
-                         "one another")
+    gpt, row_of = _group_tile_index(bk, group_size)
+    sz_index = lambda i, j, k: (row_of(k), j)
     nk = K // bk
 
     grid = (M // bm, N // bn, nk)
@@ -122,5 +151,57 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, packed, scale, zero)
+
+
+def quant_matmul_experts(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                         zero: jax.Array, *, bits: int, group_size: int,
+                         block_m: int = 256, block_n: int = 256,
+                         block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """Expert-batched fused dequant-matmul in ONE pallas_call.
+
+    x: (E, M, K); packed: (E, K//ppb, N) uint8; scale/zero: (E, K//g, N).
+    Returns (E, M, N) in x.dtype.  The expert dim is folded into the grid
+    (leading parallel axis) instead of unrolling one kernel launch per
+    expert — each expert's packed tiles are still DMA'd exactly once.
+    Same divisibility contract as quant_matmul, enforced per expert.
+    """
+    E, M, K = x.shape
+    ppb = PACK_FACTOR[bits]
+    N = packed.shape[2]
+    if packed.shape != (E, K // ppb, N) or K % ppb:
+        raise ValueError(
+            f"expert packed shape {packed.shape} inconsistent with "
+            f"(E={E}, K={K}, bits={bits})")
+    ng = K // group_size
+    if K % group_size or scale.shape != (E, ng, N) or zero.shape != (E, ng, N):
+        raise ValueError(
+            f"expert scale/zero shapes {scale.shape}/{zero.shape} "
+            f"inconsistent with (E={E}, K={K}, group_size={group_size})")
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    gpt, row_of = _group_tile_index(bk, group_size)
+    nk = K // bk
+
+    grid = (E, M // bm, N // bn, nk)
+    kernel = functools.partial(_qmm_expert_kernel, bits=bits, nk=nk,
+                               groups_per_tile=gpt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk // ppb, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, gpt, bn), lambda e, i, j, k: (e, row_of(k), j)),
+            pl.BlockSpec((1, gpt, bn), lambda e, i, j, k: (e, row_of(k), j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(x, packed, scale, zero)

@@ -24,8 +24,12 @@ longest member.  This module is the scheduler that docstring promised:
 
 The decode loop is sync-free: completions are token-budget driven (host-known
 at admission), so the only host round-trips are one per admission (the first
-generated token) and one final sync.  Per-step token/logit device arrays are
-fetched after the loop ends.
+generated token) and one final sync.  Per-step token device arrays are
+fetched after the loop ends.  ``collect_logits=True`` fetches each step's
+logits to host eagerly instead — retaining every step's full (slots, vocab)
+logits on device grows HBM linearly with run length — so logit-collecting
+runs sync per step and are NOT timing-comparable (parity and debug callers
+don't time themselves anyway).
 
 Per-request outputs are bit-identical to serving the same request alone
 through ``serve_requests`` at the same cache width: active rows see exactly
@@ -172,7 +176,7 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                    "finish_step": None, "tokens": [], "logits": []}
            for r in order}
     pending = deque(order)
-    trace = []            # (active snapshot, slot->rid snapshot, tok, logits)
+    trace = []            # (active snapshot, slot->rid snapshot, tok)
     t = 0                 # scheduler clock, in decode steps dispatched
     steps = 0
     occupancy_acc = 0
@@ -205,8 +209,7 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
             r["admit_step"] = t
             r["tokens"].append(tok0)
             if collect_logits:
-                # device array; fetched with the rest after the loop
-                r["logits"].append(lg1[0])
+                r["logits"].append(np.asarray(lg1[0], np.float32))
             if req.max_new_tokens == 1:
                 r["finish_step"] = t             # done at prefill
             else:
@@ -224,8 +227,14 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
         # ---- one masked decode step over every slot -----------------------
         logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
                                                 active_d)
-        trace.append((active_h.copy(), slot_rid.copy(), tok,
-                      logits if collect_logits else None))
+        if collect_logits:
+            # eager per-step fetch of ACTIVE rows only: bounded device
+            # memory (regression-tested in tests/test_scheduler.py)
+            lg_np = np.asarray(logits, np.float32)
+            for s in np.flatnonzero(active_h):
+                res[slot_rid[s]]["logits"].append(lg_np[s])
+        del logits
+        trace.append((active_h.copy(), slot_rid.copy(), tok))
         steps += 1
         occupancy_acc += int(active_h.sum())
         t += 1
@@ -244,14 +253,10 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
     decode_secs = max(total_secs - prefill_secs, 1e-9)
 
     # ---- reconstruct per-request streams (host transfers OFF the clock) ---
-    for mask, rids, tok_d, lg_d in trace:
+    for mask, rids, tok_d in trace:
         tok_np = np.asarray(tok_d)
-        lg_np = np.asarray(lg_d, np.float32) if lg_d is not None else None
         for s in np.flatnonzero(mask):
-            r = res[rids[s]]
-            r["tokens"].append(int(tok_np[s]))
-            if lg_np is not None:
-                r["logits"].append(lg_np[s])
+            res[rids[s]]["tokens"].append(int(tok_np[s]))
 
     useful = 0
     latencies = []
@@ -259,8 +264,7 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
         rr = res[r.rid]
         rr["tokens"] = np.asarray(rr["tokens"], np.int32)
         assert rr["tokens"].shape == (r.max_new_tokens,)
-        rr["logits"] = (np.stack([np.asarray(a, np.float32)
-                                  for a in rr["logits"]], 0)
+        rr["logits"] = (np.stack(rr["logits"], 0)
                         if rr["logits"] else None)
         rr["latency_steps"] = rr["finish_step"] - rr["arrival"]
         latencies.append(rr["latency_steps"])

@@ -207,8 +207,9 @@ def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
     def prefill_step(params, batch, cache):
         return model.prefill(params, batch, cache, ctx)
 
-    def decode_step(params, cache, tokens, pos):
-        return model.decode_step(params, cache, tokens, pos, dctx)
+    def decode_step(params, cache, tokens, pos, active=None):
+        return model.decode_step(params, cache, tokens, pos, dctx,
+                                 active=active)
 
     return model, prefill_step, decode_step
 
@@ -255,7 +256,10 @@ def make_sched_steps(cfg: ModelConfig, mesh=None, *, max_seq: int,
 
     def sched_decode_step(params, cache, tok, pos, active):
         write_pos = jnp.where(active, pos, max_seq)
-        logits, cache = decode_step(params, cache, tok, write_pos)
+        # occupancy reaches the kernel: the slot-aware decode attention
+        # skips dead slots instead of computing-then-masking their rows
+        logits, cache = decode_step(params, cache, tok, write_pos,
+                                    active=active)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         tok = jnp.where(active, nxt, tok)
         pos = jnp.where(active, pos + 1, pos)

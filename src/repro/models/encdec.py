@@ -63,7 +63,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
-          cache_pos=None, kv_len=None, precomputed_kv=None):
+          cache_pos=None, kv_len=None, precomputed_kv=None, active=None):
     B, S, d = x.shape
     hd = cfg.resolved_head_dim
     kb = ctx.kernel_backend
@@ -82,7 +82,8 @@ def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
             new_kv = {"k": ck, "v": cv}
             k, v = ck, cv
     o = L.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
-                          kv_len=kv_len, chunk=ctx.attn_chunk)
+                          kv_len=kv_len, chunk=ctx.attn_chunk,
+                          backend=kb, active=active)
     o = o.reshape(B, S, cfg.num_heads * hd)
     return L.matmul(o, ap["wo"], kb), new_kv
 
@@ -107,13 +108,13 @@ def encoder_block(bp, x, cfg, ctx):
 
 
 def decoder_block(bp, x, enc_out, cfg, ctx, *, q_offset=0, self_kv=None,
-                  cache_pos=None, kv_len=None, cross_kv=None):
+                  cache_pos=None, kv_len=None, cross_kv=None, active=None):
     h = L.layer_norm(x, bp["ln1"], jnp.zeros_like(bp["ln1"]), cfg.norm_eps)
     if ctx.act_bits:
         h = L.fake_quant_act(h, ctx.act_bits)
     a, new_self = _attn(bp["attn"], h, h, cfg, ctx, causal=True,
                         q_offset=q_offset, kv_cache=self_kv,
-                        cache_pos=cache_pos, kv_len=kv_len)
+                        cache_pos=cache_pos, kv_len=kv_len, active=active)
     x = x + a
     hx = L.layer_norm(x, bp["ln_x"], jnp.zeros_like(bp["ln_x"]), cfg.norm_eps)
     if ctx.act_bits:
@@ -212,7 +213,7 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX):
+                ctx: Ctx = DEFAULT_CTX, *, active=None):
     B = tokens.shape[0]
     x = params["embed"][tokens][:, None, :]
     # position embedding at the current position (gather one row per request)
@@ -223,7 +224,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
         bp, sk, sv, ck, cv = layer
         h, new_self = decoder_block(bp, h, None, cfg, ctx, q_offset=pos,
                                     self_kv={"k": sk, "v": sv}, cache_pos=pos,
-                                    kv_len=pos + 1, cross_kv=(ck, cv))
+                                    kv_len=pos + 1, cross_kv=(ck, cv),
+                                    active=active)
         return h, (new_self["k"], new_self["v"])
 
     x, (nk, nv) = layer_loop(

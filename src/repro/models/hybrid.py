@@ -43,11 +43,12 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _shared_block(params, x, cfg, ctx, *, positions, kv_cache=None,
-                  cache_pos=None, kv_len=None):
+                  cache_pos=None, kv_len=None, active=None):
     bp = take_layer(params["shared_attn"], 0)
     return transformer.block(bp, x, cfg.replace(family="dense"), ctx,
                              positions=positions, kv_cache=kv_cache,
-                             cache_pos=cache_pos, kv_len=kv_len)
+                             cache_pos=cache_pos, kv_len=kv_len,
+                             active=active)
 
 
 def _slice_seg(tree, s, e):
@@ -94,7 +95,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     }
 
 
-def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode):
+def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode,
+         active=None):
     """Shared prefill/decode body over segments."""
     new_mamba_conv, new_mamba_ssm = [], []
     new_k, new_v = [], []
@@ -115,7 +117,7 @@ def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode):
             kv = {"k": cache["attn_k"][site], "v": cache["attn_v"][site]}
             x, nkv = _shared_block(params, x, cfg, ctx, positions=positions,
                                    kv_cache=kv, cache_pos=cache_pos,
-                                   kv_len=kv_len)
+                                   kv_len=kv_len, active=active)
             new_k.append(nkv["k"])
             new_v.append(nkv["v"])
             site += 1
@@ -140,10 +142,11 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX):
+                ctx: Ctx = DEFAULT_CTX, *, active=None):
     x = params["embed"][tokens][:, None, :]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=pos[:, None],
-                        cache_pos=pos, kv_len=pos + 1, decode=True)
+                        cache_pos=pos, kv_len=pos + 1, decode=True,
+                        active=active)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache

@@ -218,17 +218,35 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     kv_len: Optional[jax.Array] = None,
                     chunk: int = 512,
                     scale: Optional[float] = None,
-                    prefix_len: Optional[int] = None) -> jax.Array:
+                    prefix_len: Optional[int] = None,
+                    backend: Optional[str] = None,
+                    active: Optional[jax.Array] = None) -> jax.Array:
     """Chunked attention with GQA support.
 
     q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
     ``q_offset``: absolute position of q[0] (scalar or (B,)) for causal masks
     during decode.  ``kv_len``: (B,) valid KV length (cache masking).
+    ``backend``: kernel backend for the Sq == 1 decode step — "pallas"
+    dispatches the slot-aware decode kernel, which reads the cache-lane
+    layout directly and skips inactive slots via ``active`` ((B,) occupancy,
+    None = all live) and the ragged ``kv_len`` instead of masking post-hoc.
+    Inactive rows come back zero.
     """
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     G = Hq // Hkv
     scale = scale if scale is not None else D ** -0.5
+
+    if (Sq == 1 and causal and kv_len is not None and prefix_len is None
+            and resolve_backend(backend) == "pallas"):
+        from repro.kernels.ops import decode_attention_op
+        q_pos = jnp.broadcast_to(
+            jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
+        out = decode_attention_op(q.reshape(B, Hkv, G, D), k, v,
+                                  kv_len=kv_len, q_pos=q_pos, active=active,
+                                  scale=scale, chunk=chunk)
+        return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
     qf = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
     qf = qf.transpose(0, 2, 3, 1, 4)                           # (B,Hkv,G,Sq,D)
 

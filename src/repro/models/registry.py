@@ -39,8 +39,8 @@ def get_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b, ctx=DEFAULT_CTX: transformer.loss_fn(p, cfg, b, ctx),
             prefill=lambda p, b, c, ctx=DEFAULT_CTX: transformer.prefill(
                 p, cfg, b["tokens"], c, ctx),
-            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
-                transformer.decode_step(p, cfg, c, t, pos, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX, active=None:
+                transformer.decode_step(p, cfg, c, t, pos, ctx, active=active),
             init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
                 transformer.init_cache(cfg, batch, max_seq, dtype),
         )
@@ -51,8 +51,8 @@ def get_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b, ctx=DEFAULT_CTX: rwkv.loss_fn(p, cfg, b, ctx),
             prefill=lambda p, b, c, ctx=DEFAULT_CTX: rwkv.prefill(
                 p, cfg, b["tokens"], c, ctx),
-            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
-                rwkv.decode_step(p, cfg, c, t, pos, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX, active=None:
+                rwkv.decode_step(p, cfg, c, t, pos, ctx, active=active),
             init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
                 rwkv.init_cache(cfg, batch, max_seq, dtype),
         )
@@ -63,8 +63,8 @@ def get_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b, ctx=DEFAULT_CTX: hybrid.loss_fn(p, cfg, b, ctx),
             prefill=lambda p, b, c, ctx=DEFAULT_CTX: hybrid.prefill(
                 p, cfg, b["tokens"], c, ctx),
-            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
-                hybrid.decode_step(p, cfg, c, t, pos, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX, active=None:
+                hybrid.decode_step(p, cfg, c, t, pos, ctx, active=active),
             init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
                 hybrid.init_cache(cfg, batch, max_seq, dtype),
         )
@@ -75,8 +75,8 @@ def get_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b, ctx=DEFAULT_CTX: encdec.loss_fn(p, cfg, b, ctx),
             prefill=lambda p, b, c, ctx=DEFAULT_CTX: encdec.prefill(
                 p, cfg, b["frames"], b["tokens"], c, ctx),
-            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
-                encdec.decode_step(p, cfg, c, t, pos, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX, active=None:
+                encdec.decode_step(p, cfg, c, t, pos, ctx, active=active),
             init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
                 encdec.init_cache(cfg, batch, max_seq, dtype),
         )
@@ -87,8 +87,8 @@ def get_model(cfg: ModelConfig) -> Model:
             loss_fn=lambda p, b, ctx=DEFAULT_CTX: vlm.loss_fn(p, cfg, b, ctx),
             prefill=lambda p, b, c, ctx=DEFAULT_CTX: vlm.prefill(
                 p, cfg, b["patches"], b["tokens"], c, ctx),
-            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX:
-                vlm.decode_step(p, cfg, c, t, pos, ctx),
+            decode_step=lambda p, c, t, pos, ctx=DEFAULT_CTX, active=None:
+                vlm.decode_step(p, cfg, c, t, pos, ctx, active=active),
             init_cache=lambda batch, max_seq, dtype=jnp.bfloat16:
                 vlm.init_cache(cfg, batch, max_seq, dtype),
         )

@@ -200,7 +200,10 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos=None,
-                ctx: Ctx = DEFAULT_CTX):
+                ctx: Ctx = DEFAULT_CTX, *, active=None):
+    # ``active`` accepted for the uniform decode API; the linear-state RWKV
+    # path has no attention kernel to skip slots in (del marks it used)
+    del active
     x = params["embed"][tokens][:, None, :]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
 

@@ -70,7 +70,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
               positions, kv_cache=None, cache_pos=None, kv_len=None,
-              prefix_len: Optional[int] = None):
+              prefix_len: Optional[int] = None, active=None):
     """Self-attention with optional KV cache.  Returns (out, new_kv or None)."""
     Bb, S, d = x.shape
     hd = cfg.resolved_head_dim
@@ -113,7 +113,7 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
 
     o = L.flash_attention(q, attn_k, attn_v, causal=True, q_offset=q_offset,
                           kv_len=valid, chunk=ctx.attn_chunk,
-                          prefix_len=prefix_len)
+                          prefix_len=prefix_len, backend=kb, active=active)
     o = o.reshape(Bb, S, cfg.num_heads * hd)
     if ctx.act_bits:
         o = L.fake_quant_act(o, ctx.act_bits)
@@ -137,10 +137,10 @@ def ffn(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
 
 def block(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *,
           positions, kv_cache=None, cache_pos=None, kv_len=None,
-          prefix_len=None):
+          prefix_len=None, active=None):
     a, new_kv = attention(bp, x, cfg, ctx, positions=positions,
                           kv_cache=kv_cache, cache_pos=cache_pos,
-                          kv_len=kv_len, prefix_len=prefix_len)
+                          kv_len=kv_len, prefix_len=prefix_len, active=active)
     x = x + a
     x = x + ffn(bp, x, cfg, ctx)
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
@@ -229,15 +229,18 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX):
-    """One decode step. tokens: (B,), pos: (B,) current write position."""
+                ctx: Ctx = DEFAULT_CTX, *, active=None):
+    """One decode step. tokens: (B,), pos: (B,) current write position.
+    ``active``: (B,) slot-occupancy vector from the scheduler — the
+    slot-aware decode attention kernel skips dead slots entirely."""
     x = embed_tokens(params, cfg, tokens)[:, None, :]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
 
     def step(h, layer):
         bp, kv = layer
         h, new_kv = block(bp, h, cfg, ctx, positions=pos[:, None],
-                          kv_cache=kv, cache_pos=pos, kv_len=pos + 1)
+                          kv_cache=kv, cache_pos=pos, kv_len=pos + 1,
+                          active=active)
         return h, new_kv
 
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),

@@ -1,0 +1,106 @@
+"""Slot-aware decode attention kernel: parity against the XLA Sq == 1 fast
+path on ragged kv_len, occupancy skipping, GQA folding, and the dispatch
+seam in layers.flash_attention (interpret mode executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import decode_attention_op
+from repro.models import layers as L
+
+
+def _xla_decode(q4, k, v, *, kv_len, q_pos, scale):
+    """Reference = the XLA Sq == 1 fast path, reshaped to kernel layout."""
+    B, Hkv, G, D = q4.shape
+    q = q4.reshape(B, 1, Hkv * G, D)
+    return L.flash_attention(q, k, v, causal=True, q_offset=q_pos,
+                             kv_len=kv_len, scale=scale,
+                             backend="xla").reshape(B, Hkv, G, D)
+
+
+@pytest.mark.parametrize("shape,chunk", [
+    ((3, 25, 2, 2, 16), 8),     # ragged tail chunk (25 % 8 != 0), multi-chunk
+    ((1, 7, 1, 4, 32), 128),    # single chunk covering everything
+    ((4, 40, 2, 1, 16), 16),    # G == 1 (MHA), several chunks
+    ((2, 33, 3, 2, 8), 11),     # odd everything
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_kv_len(shape, chunk, dtype):
+    B, S, Hkv, G, D = shape
+    rng = np.random.default_rng(B * S)
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    # genuinely ragged: every slot at a different position
+    kv_len = jnp.asarray(rng.permutation(S)[:B] + 1, jnp.int32)
+    q_pos = kv_len - 1
+    got = decode_attention_op(q, k, v, kv_len=kv_len, q_pos=q_pos,
+                              chunk=chunk)
+    want = _xla_decode(q, k, v, kv_len=kv_len, q_pos=q_pos, scale=D ** -0.5)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_inactive_slots_zero():
+    """Dead slots are SKIPPED, not masked: their output rows are exactly
+    zero and the live rows are untouched by who else is dead."""
+    B, S, Hkv, G, D = 4, 24, 2, 2, 16
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    kv_len = jnp.asarray([5, 20, 1, 13], jnp.int32)
+    q_pos = kv_len - 1
+    active = jnp.asarray([True, False, True, False])
+    got = np.asarray(decode_attention_op(q, k, v, kv_len=kv_len, q_pos=q_pos,
+                                         active=active, chunk=8))
+    full = np.asarray(decode_attention_op(q, k, v, kv_len=kv_len,
+                                          q_pos=q_pos, chunk=8))
+    act = np.asarray(active)
+    assert not got[~act].any(), "inactive slots must emit zeros"
+    np.testing.assert_array_equal(got[act], full[act])
+
+
+def test_decode_attention_rejects_layout_mismatch():
+    q = jnp.zeros((2, 2, 1, 8))
+    k = jnp.zeros((2, 16, 3, 8))                   # Hkv mismatch
+    lens = jnp.asarray([4, 4], jnp.int32)
+    with pytest.raises(ValueError, match="cache-lane layout"):
+        decode_attention_op(q, k, q, kv_len=lens, q_pos=lens - 1)
+
+
+def test_flash_attention_decode_dispatch_parity():
+    """The layers.flash_attention seam: backend="pallas" with Sq == 1 must
+    agree with the XLA fast path on the SAME (B, Sq, Hq, D) interface."""
+    B, S, Hq, Hkv, D = 3, 19, 4, 2, 16
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    kv_len = jnp.asarray([6, 19, 2], jnp.int32)
+    q_pos = kv_len - 1
+    kw = dict(causal=True, q_offset=q_pos, kv_len=kv_len, chunk=1 << 30)
+    got = L.flash_attention(q, k, v, backend="pallas", **kw)
+    want = L.flash_attention(q, k, v, backend="xla", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_prefix_lm_falls_back_to_xla():
+    """prefix_len (prefix-LM / VLM) is outside the decode kernel's mask
+    contract, so pallas dispatch must fall back — outputs still match the
+    xla backend bit-for-bit because it IS the xla path."""
+    B, S, Hq, D = 2, 12, 2, 8
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    kv_len = jnp.asarray([8, 12], jnp.int32)
+    kw = dict(causal=True, q_offset=kv_len - 1, kv_len=kv_len,
+              prefix_len=4, chunk=1 << 30)
+    got = L.flash_attention(q, k, v, backend="pallas", **kw)
+    want = L.flash_attention(q, k, v, backend="xla", **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -169,3 +169,129 @@ def test_quant_matmul_k_padding(bits, K, group, block_k):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=1e-3, atol=1e-3)
+
+
+# -- decode-shaped fused dequant-GEMV ---------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("M", [1, 2, 3, 5, 8, 24])
+def test_quant_gemv_slot_sweep(bits, M):
+    """Decode batches (M = live slots, 1..slots) through the GEMV kernel
+    match the oracle — grouped, at every deployed bit-width."""
+    from repro.kernels.ops import quant_gemv_op
+    K, N, g = 256, 96, 32
+    rng = np.random.default_rng(bits * 100 + M)
+    codes = rng.integers(0, 1 << bits, (K, N)).astype(np.uint8)
+    scale = (rng.random((K // g, N)).astype(np.float32) + 0.5) * 0.1
+    zero = rng.integers(0, 1 << bits, (K // g, N)).astype(np.float32)
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    got = quant_gemv_op(x, packed, jnp.asarray(scale), jnp.asarray(zero),
+                        bits=bits, group_size=g)
+    want = ref.quant_matmul_ref(x, packed, jnp.asarray(scale),
+                                jnp.asarray(zero), bits=bits, group_size=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("K,group", [
+    (128, 128),    # per-channel: one scale row resident across all K tiles
+    (48, 16),      # K pads 48 -> 64: GEMV K-padding contract
+    (256, 64),     # several groups per K strip, sliced in-kernel
+])
+def test_quant_gemv_grouping_and_padding(bits, K, group):
+    from repro.kernels.ops import quant_gemv_op
+    M, N = 3, 40
+    rng = np.random.default_rng(bits * 10 + K)
+    codes = rng.integers(0, 1 << bits, (K, N)).astype(np.uint8)
+    scale = (rng.random((K // group, N)).astype(np.float32) + 0.5) * 0.1
+    zero = rng.integers(0, 1 << bits, (K // group, N)).astype(np.float32)
+    packed = pack(jnp.asarray(codes), bits, axis=0)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    got = quant_gemv_op(x, packed, jnp.asarray(scale), jnp.asarray(zero),
+                        bits=bits, group_size=group, block_k=64)
+    want = ref.quant_matmul_ref(x, packed, jnp.asarray(scale),
+                                jnp.asarray(zero), bits=bits,
+                                group_size=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("group", [32, None])       # grouped and per-channel
+@pytest.mark.parametrize("M", [1, 2, 4, 6, 8])
+def test_qtensor_matmul_backend_parity_decode_rows(bits, group, M):
+    """xla-vs-pallas parity at M = 1..slots on a real QTensor — the decode
+    dispatch (GEMV route) must agree with the XLA unpack path at every
+    deployed bit-width, grouped and per-channel."""
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.core.qtensor import qmatmul
+    from repro.kernels.ops import qtensor_matmul
+    K = 128
+    rng = np.random.default_rng(bits * 1000 + M + (group or 0))
+    w = jnp.asarray(rng.normal(size=(K, 64)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=bits, group_size=group))
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    got = qtensor_matmul(x, qt)
+    want = qmatmul(x, qt)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_qtensor_matmul_dispatch_boundary():
+    """Rows <= DECODE_GEMV_MAX_ROWS take the GEMV, above take the tiled
+    matmul — and the two agree where they meet."""
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import (DECODE_GEMV_MAX_ROWS, qtensor_matmul,
+                                   quant_gemv_op, quant_matmul_op)
+    K = 64
+    rng = np.random.default_rng(21)
+    w = jnp.asarray(rng.normal(size=(K, 32)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=4, group_size=32))
+    s, z = qt.scale.astype(jnp.float32), qt.zero.astype(jnp.float32)
+    at = jnp.asarray(rng.normal(size=(DECODE_GEMV_MAX_ROWS, K)), jnp.float32)
+    above = jnp.asarray(rng.normal(size=(DECODE_GEMV_MAX_ROWS + 1, K)),
+                        jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(qtensor_matmul(at, qt)),
+        np.asarray(quant_gemv_op(at, qt.packed, s, z, bits=4, group_size=32)))
+    np.testing.assert_array_equal(
+        np.asarray(qtensor_matmul(above, qt)),
+        np.asarray(quant_matmul_op(above, qt.packed, s, z,
+                                   bits=4, group_size=32)))
+
+
+# -- expert-folded grid ------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_expert_matmul_fused_grid_bit_parity(bits):
+    """One pallas_call with the expert dim folded into the grid must be
+    BIT-identical to the unrolled one-launch-per-expert version."""
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import (qtensor_expert_matmul,
+                                   qtensor_expert_matmul_unrolled)
+    E, C, K, N = 4, 16, 96, 48
+    rng = np.random.default_rng(bits * 31)
+    w = jnp.asarray(rng.normal(size=(E, K, N)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=bits, group_size=32))
+    a = jnp.asarray(rng.normal(size=(E, C, K)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(qtensor_expert_matmul(a, qt)),
+        np.asarray(qtensor_expert_matmul_unrolled(a, qt)))
+
+
+def test_expert_matmul_rejects_non_stacked():
+    from repro.core.quantizer import make_qtensor
+    from repro.configs.base import QuantConfig
+    from repro.kernels.ops import qtensor_expert_matmul
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    qt = make_qtensor(w, QuantConfig(bits=4, group_size=32))
+    a = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    with pytest.raises(ValueError, match="expert-stacked"):
+        qtensor_expert_matmul(a, qt)
