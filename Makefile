@@ -3,7 +3,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-slow test-multidevice lint bench-smoke bench \
-	bench-serve bench-serve-smoke eval eval-smoke
+	bench-serve bench-serve-smoke bench-paged-smoke eval eval-smoke
 
 # tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
 test:
@@ -39,6 +39,12 @@ bench-serve:
 
 bench-serve-smoke:
 	$(PY) -m benchmarks.serve_speed --smoke
+
+# quick local loop for the paged-vs-dense KV cache sweep only (the
+# paged_vs_dense_goodput / paged_cache_bytes / identity gates); the
+# full CI serve-smoke leg runs the same section inside bench-serve-smoke
+bench-paged-smoke:
+	$(PY) -m benchmarks.serve_speed --smoke --paged-only --json BENCH_paged.json
 
 # one-command quality harness: FP vs RTN/AWQ/TesseraQ perplexity + choice
 # accuracy + packed-model eval + xla/pallas logits-parity gate; emits

@@ -38,7 +38,7 @@ def main():
     qcfg = QuantConfig(bits=2, group_size=16)
     tcfg = TesseraQConfig(par_iterations=5, steps_per_iteration=25)
 
-    print(f"\n{qcfg.tag()} perplexity (lower is better):")
+    print(f"\n{qcfg.tag} perplexity (lower is better):")
     print(f"  fp16      : {perplexity(cfg, params, evalb):8.2f}")
     for label, method, init in [("rtn", "none", "rtn"),
                                 ("awq", "none", "awq"),

@@ -35,8 +35,16 @@ class QuantConfig:
     def qmax(self) -> int:
         return (1 << self.bits) - 1
 
+    @property
     def tag(self) -> str:
-        g = f"g{self.group_size}" if self.group_size else "pc"
+        """Canonical ``W<bits>A<act_bits>[g<group>]`` tag.
+
+        Round-trips through ``repro.launch.serve.parse_quant``:
+        ``parse_quant(q.tag) == q`` for any config parse_quant can produce.
+        Per-channel (``group_size=None``) omits the ``g`` suffix — the old
+        ``pc`` suffix produced tags the parser rejected, so BENCH/EVAL row
+        keys could not be fed back into the CLI."""
+        g = f"g{self.group_size}" if self.group_size else ""
         a = f"A{self.act_bits}" if self.act_bits else "A16"
         return f"W{self.bits}{a}{g}"
 

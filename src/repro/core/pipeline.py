@@ -107,7 +107,7 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
     params_q = params
     saved: Dict[str, np.ndarray] = {}
     qmeta_all: Dict = {}
-    report = {"blocks": [], "method": method, "init": init, "qcfg": qcfg.tag()}
+    report = {"blocks": [], "method": method, "init": init, "qcfg": qcfg.tag}
 
     X = X_fp = None
     for stage in stages:

@@ -59,7 +59,8 @@ def logits_parity(cfg, model, packed, prompts, *, gen: int, atol: float,
     """Prefill + (gen-1) decode steps under both backends; allclose gate."""
     runs = {b: serve_requests(cfg, model, packed, prompts, gen=gen,
                               kernel_backend=b) for b in ("xla", "pallas")}
-    return parity_gate(runs["xla"]["logits"], runs["pallas"]["logits"],
+    return parity_gate(runs["xla"].logits_matrix(),
+                       runs["pallas"].logits_matrix(),
                        atol=atol, rtol=rtol)
 
 
@@ -81,7 +82,7 @@ def run_harness(args) -> dict:
     tcfg = TesseraQConfig(par_iterations=args.par_iters,
                           steps_per_iteration=args.par_steps)
 
-    out = {"arch": cfg.name, "qcfg": qcfg.tag(), "rows": {}, "parity": {}}
+    out = {"arch": cfg.name, "qcfg": qcfg.tag, "rows": {}, "parity": {}}
     t0 = time.time()
     out["rows"]["fp"] = {
         "ppl": perplexity(cfg, params, evalb),

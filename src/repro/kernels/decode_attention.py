@@ -81,6 +81,113 @@ def _decode_attn_kernel(len_ref, act_ref, pos_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _paged_decode_attn_kernel(ptab_ref, len_ref, pos_ref, act_ref,
+                              q_ref, k_ref, v_ref,
+                              o_ref, m_ref, l_ref, acc_ref, *,
+                              psz: int, nc: int, scale: float):
+    b = pl.program_id(0)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[b]
+    q_pos = pos_ref[b]
+
+    @pl.when((act_ref[b] > 0) & (c * psz < kv_len))
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+        kb = k_ref[0, :, 0, :].astype(jnp.float32)             # (psz, D)
+        vb = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = c * psz + jax.lax.broadcasted_iota(jnp.int32, (1, psz), 1)
+        s = jnp.where((kpos < kv_len) & (kpos <= q_pos), s, _NEG_INF)
+        m_prev = m_ref[:, :1]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_ref[:, :1] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(c == nc - 1)
+    def _done():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           ptab: jax.Array, *,
+                           kv_len: jax.Array, q_pos: jax.Array,
+                           active: jax.Array | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Single-token decode attention over a paged KV pool.
+
+    q: (B, Hkv, G, D).  k_pool/v_pool: (P, psz, Hkv, D) page pools.
+    ptab: (B, W) int32 page table — logical chunk c of slot b lives in pool
+    page ``ptab[b, c]``; W * psz == max_seq.  The page table rides in as a
+    scalar-prefetch operand so the k/v block index maps can chase it: the
+    grid's chunk axis walks LOGICAL positions while the blocks fetched are
+    whichever physical pages the table names.  Unallocated table entries
+    (page 0) are loaded but fully masked by ``kv_len``, which keeps the
+    online softmax bit-identical to the dense kernel at chunk == psz.
+
+    kv_len/q_pos: (B,) int32; active: (B,) occupancy or None for all-live.
+    Returns (B, Hkv, G, D) in q.dtype; rows of inactive slots are zero.
+    """
+    B, Hkv, G, D = q.shape
+    P, psz = k_pool.shape[0], k_pool.shape[1]
+    W = ptab.shape[1]
+    if k_pool.shape != (P, psz, Hkv, D) or v_pool.shape != (P, psz, Hkv, D):
+        raise ValueError(f"pool layout mismatch: q {q.shape} vs "
+                         f"k {k_pool.shape} / v {v_pool.shape}")
+    if ptab.shape != (B, W):
+        raise ValueError(f"ptab {ptab.shape} is not (B={B}, W)")
+    scale = float(D) ** -0.5 if scale is None else scale
+    act = (jnp.ones((B,), jnp.int32) if active is None
+           else active.astype(jnp.int32))
+    kernel = functools.partial(_paged_decode_attn_kernel, psz=psz, nc=W,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, Hkv, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, c, *refs: (b, h, 0, 0)),
+            pl.BlockSpec((1, psz, 1, D),
+                         lambda b, h, c, ptab_ref, *refs:
+                         (ptab_ref[b, c], 0, h, 0)),
+            pl.BlockSpec((1, psz, 1, D),
+                         lambda b, h, c, ptab_ref, *refs:
+                         (ptab_ref[b, c], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, c, *refs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (col 0 live)
+            pltpu.VMEM((G, 128), jnp.float32),   # running sum (col 0 live)
+            pltpu.VMEM((G, D), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ptab.astype(jnp.int32), kv_len.astype(jnp.int32),
+      q_pos.astype(jnp.int32), act, q, k_pool, v_pool)
+
+
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      kv_len: jax.Array, q_pos: jax.Array,
                      active: jax.Array | None = None,

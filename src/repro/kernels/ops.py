@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.qtensor import PACK_FACTOR, QTensor
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            paged_decode_attention)
 from repro.kernels.int8_matmul import int8_matmul
 from repro.kernels.quant_gemv import quant_gemv
 from repro.kernels.quant_matmul import quant_matmul, quant_matmul_experts
@@ -259,3 +260,14 @@ def decode_attention_op(q, k, v, *, kv_len, q_pos, active=None, scale=None,
     return decode_attention(q, k, v, kv_len=kv_len, q_pos=q_pos,
                             active=active, scale=scale, chunk=chunk,
                             interpret=_interpret())
+
+
+def paged_decode_attention_op(q, k_pool, v_pool, ptab, *, kv_len, q_pos,
+                              active=None, scale=None):
+    """Paged decode attention (see kernels/decode_attention.py).
+
+    q: (B, Hkv, G, D); k_pool/v_pool: (P, psz, Hkv, D) page pools;
+    ptab: (B, W) page table; kv_len/q_pos: (B,); active: (B,) or None."""
+    return paged_decode_attention(q, k_pool, v_pool, ptab, kv_len=kv_len,
+                                  q_pos=q_pos, active=active, scale=scale,
+                                  interpret=_interpret())

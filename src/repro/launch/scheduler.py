@@ -7,9 +7,11 @@ longest member.  This module is the scheduler that docstring promised:
   * a FIFO **request queue** with per-request arrival times (decode-step
     units, from a seeded plan — see :func:`make_workload`);
   * a fixed number of **slots**, each owning one lane of the batched cache
-    (``models.common.write_slot`` moves a prefilled request's state into its
-    slot; the cache layout contract is slot == axis 1 on every leaf, which
-    every family's ``init_cache`` obeys);
+    (the per-family cache layout — which leaves are per-token, where the
+    slot axis sits — is DECLARED by ``Model.cache_spec``, a
+    ``models.common.CacheSpec``; ``write_slot`` moves a prefilled request's
+    state into its slot under the dense store, the paged install step
+    scatters it into pool pages under the paged store);
   * **ragged lengths**: each request prefills at its true prompt length
     (batch-of-1, one jit specialization per distinct length) and decodes
     until its own token budget, not the batch max;
@@ -37,6 +39,20 @@ the arguments the plain loop passes, and every op in the decode path is
 batch-row independent.  (Exception: MoE capacity dispatch couples rows by
 construction — tokens compete for per-expert capacity slots — so MoE gets
 determinism, not alone-parity.)
+
+``store="paged"`` swaps the dense per-slot lanes for a vLLM-style paged KV
+cache (``models.common.PagedCacheStore``): token leaves live in a fixed
+pool of ``page_size``-token pages, admission allocates a lifetime's worth
+of pages (waiting in queue instead of failing when the pool is tight), and
+the page table reaches the decode step as a device array.  Because the
+gathered virtual cache spans the FULL logical width and junk beyond
+``kv_len`` is masked to exactly -1e30 in dense and paged alike, paged
+per-request outputs stay BIT-identical to the dense store's.
+``prefill_chunk > 0`` additionally splits chunkable families' prompts into
+chunks interleaved one-per-iteration with decode (store-agnostic — chunk
+steps run at full cache width, so dense and paged chunked prefill remain
+bit-identical at the same chunk schedule), and ``share_prefix=True`` lets
+paged chunked admission reuse full prompt-prefix pages copy-on-write.
 """
 from __future__ import annotations
 
@@ -50,8 +66,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.launch.steps import cache_donate_argnums, make_sched_steps
-from repro.models.common import write_slot
+from repro.launch.steps import (cache_donate_argnums, make_paged_install_step,
+                                make_sched_steps)
+from repro.models.common import (DenseCacheStore, PagedCacheStore, write_slot)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,27 +101,109 @@ def _push(host_arr: np.ndarray):
 
 @dataclasses.dataclass(frozen=True)
 class SchedSteps:
-    """Jitted step set for one (arch, max_seq, backend, act_bits) config."""
+    """Jitted step set for one (arch, max_seq, backend, act_bits, store)
+    config."""
     model: Any
-    prefill: Any
-    decode: Any                         # (params, cache, tok, pos, active)
+    prefill: Any              # (params, batch, cache[, start_pos, ptab])
+    decode: Any               # (params, cache, tok, pos, active[, ptab])
     write_slot: Any
+    install: Any = None       # paged admission (cache, c1, slot, ptab_row)
+    page_size: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """The one result surface every serve entry point returns
+    (``serve_requests``, ``serve_scheduled``, ``serve_lockstep``).
+
+    ``requests`` maps rid -> per-request record (``tokens`` (gen,) int32,
+    ``logits`` (gen, V) or None, admission/finish bookkeeping where the
+    mode tracks it).  ``latency_steps`` holds mean/p50/p90/p99 percentiles
+    in decode-step units.  ``cache_stats`` is the cache store's accounting
+    (``CacheStore.stats()``: bytes always; page-pool counters when paged).
+    Mode-specific extras (e.g. lock-step's wasted-token accounting) ride in
+    ``extra``.  Mapping-style ``result["key"]`` access resolves attributes
+    (falling back to ``extra``) so result handling can migrate gradually.
+    """
+    mode: str                               # "uniform"|"scheduled"|"lockstep"
+    store: str                              # "dense" | "paged"
+    requests: Dict[int, Dict[str, Any]]
+    slots: int
+    max_seq: int
+    steps: int
+    useful_tokens: int
+    decode_tokens: int
+    prefill_secs: float
+    decode_secs: float
+    prefill_tok_s: float
+    decode_tok_s: float
+    occupancy: float
+    latency_steps: Dict[str, float]
+    cache_stats: Dict[str, Any]
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, key: str):
+        if key in self.extra:
+            return self.extra[key]
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def token_matrix(self) -> np.ndarray:
+        """(B, gen) token ids, rids in sorted order — uniform-budget runs
+        only (ragged budgets cannot stack; use ``requests`` directly)."""
+        rids = sorted(self.requests)
+        return np.stack([np.asarray(self.requests[r]["tokens"], np.int32)
+                         for r in rids], 0)
+
+    def logits_matrix(self) -> Optional[np.ndarray]:
+        """(B, gen, V) float32 logits, or None when not collected."""
+        rids = sorted(self.requests)
+        if not rids or self.requests[rids[0]].get("logits") is None:
+            return None
+        return np.stack([np.asarray(self.requests[r]["logits"], np.float32)
+                         for r in rids], 0)
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return self.token_matrix()
+
+    @property
+    def logits(self) -> Optional[np.ndarray]:
+        return self.logits_matrix()
+
+
+def _latency_stats(latencies) -> Dict[str, float]:
+    lat = np.asarray(latencies, np.float64)
+    return {"mean": float(lat.mean()), "p50": float(np.percentile(lat, 50)),
+            "p90": float(np.percentile(lat, 90)),
+            "p99": float(np.percentile(lat, 99))}
 
 
 def make_workload(vocab_size: int, *, n_requests: int, seed: int,
                   prompt_lens=(8, 32), budgets=(2, 24),
-                  mean_gap: float = 1.0) -> List[Request]:
+                  mean_gap: float = 1.0, long_frac: float = 0.0,
+                  long_prompt_lens=None, long_budgets=None) -> List[Request]:
     """Seeded heterogeneous request plan: mixed prompt lengths, mixed token
     budgets, Poisson inter-arrival gaps in decode-step units.  A pure
     function of its arguments, so the same seed yields the same plan on
     every run — the admission-determinism tests and the bench gate both
-    lean on that."""
+    lean on that.
+
+    ``long_frac > 0`` makes the plan LONG-TAILED: that fraction of requests
+    draws from ``long_prompt_lens``/``long_budgets`` instead — the
+    heterogeneous-length regime where dense per-slot lanes waste the most
+    memory and the paged store's sizing advantage shows up."""
     rng = np.random.default_rng(seed)
     t = 0
     reqs = []
     for rid in range(n_requests):
-        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
-        budget = int(rng.integers(budgets[0], budgets[1] + 1))
+        is_long = long_frac > 0 and rng.random() < long_frac
+        pl = long_prompt_lens if is_long else prompt_lens
+        bu = long_budgets if is_long else budgets
+        plen = int(rng.integers(pl[0], pl[1] + 1))
+        budget = int(rng.integers(bu[0], bu[1] + 1))
         prompt = rng.integers(0, vocab_size, (plen,)).astype(np.int32)
         reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=budget,
                             arrival=t))
@@ -120,39 +219,69 @@ def _prefill_len(cfg: ModelConfig, req: Request) -> int:
 
 
 def compile_sched_steps(cfg: ModelConfig, *, max_seq: int,
-                        kernel_backend=None, act_bits=None) -> SchedSteps:
+                        kernel_backend=None, act_bits=None,
+                        page_size: int = 0,
+                        decode_attn_chunk: int = 1 << 30) -> SchedSteps:
     """Jit-wrap the scheduler's step set ONCE per serving configuration.
-    Reuse the result across runs/repeats — rebuilding retraces."""
-    model, pstep, dstep = make_sched_steps(cfg, None, max_seq=max_seq,
-                                           act_bits=act_bits,
-                                           kernel_backend=kernel_backend)
+    Reuse the result across runs/repeats — rebuilding retraces.
+    ``page_size > 0`` builds the paged-store step set (page-table-aware
+    decode plus the paged admission install step)."""
+    model, pstep, dstep = make_sched_steps(
+        cfg, None, max_seq=max_seq, act_bits=act_bits,
+        kernel_backend=kernel_backend, page_size=page_size,
+        decode_attn_chunk=decode_attn_chunk)
+    install = None
+    if page_size:
+        install = jax.jit(
+            make_paged_install_step(model, page_size=page_size),
+            static_argnames=("plen",),
+            donate_argnums=cache_donate_argnums(0))
     return SchedSteps(
         model=model,
         prefill=jax.jit(pstep),
         decode=jax.jit(dstep, donate_argnums=cache_donate_argnums(1)),
         write_slot=jax.jit(write_slot,
-                           donate_argnums=cache_donate_argnums(0)))
+                           donate_argnums=cache_donate_argnums(0)),
+        install=install, page_size=page_size)
 
 
 def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                     slots: int, max_seq: Optional[int] = None,
                     kernel_backend=None, act_bits=None,
                     collect_logits: bool = False,
-                    compiled: Optional[SchedSteps] = None) -> dict:
+                    compiled: Optional[SchedSteps] = None,
+                    store: str = "dense", page_size: int = 16,
+                    num_pages: Optional[int] = None,
+                    prefill_chunk: int = 0,
+                    share_prefix: bool = False) -> ServeResult:
     """Serve ``requests`` through the slot scheduler.
 
-    Returns per-request results keyed by rid (``tokens`` is exactly
-    ``max_new_tokens`` long: the prefill token plus its decode steps) and
-    aggregate stats.  ``decode_tok_s`` counts USEFUL tokens only — every
+    Returns a :class:`ServeResult`; per-request records are keyed by rid
+    (``tokens`` is exactly ``max_new_tokens`` long: the prefill token plus
+    its decode steps).  ``decode_tok_s`` counts USEFUL tokens only — every
     request's own budget, which is also the number actually generated; the
     lock-step baseline reports the same numerator so the two compose into
-    an apples-to-apples goodput gate."""
+    an apples-to-apples goodput gate.
+
+    ``store="paged"``: token-leaf KV lives in a pool of ``num_pages``
+    pages of ``page_size`` tokens (default pool: capacity parity with the
+    dense store); admission waits in queue when the pool is tight instead
+    of failing.  ``prefill_chunk > 0``: chunkable families' prompts prefill
+    in chunks of that many tokens, one chunk interleaved per decode
+    iteration (non-chunkable families fall back to whole prefill at
+    admission).  ``share_prefix=True`` (paged + chunked only): full
+    prompt-prefix pages are shared copy-on-write across requests."""
     if slots < 1:
         raise ValueError(f"need at least one slot, got {slots}")
+    if store not in ("dense", "paged"):
+        raise ValueError(f"unknown store {store!r} (dense|paged)")
+    paged = store == "paged"
     order = sorted(requests, key=lambda r: (r.arrival, r.rid))
     if max_seq is None:
         max_seq = max(_prefill_len(cfg, r) + r.max_new_tokens
                       for r in order)
+        if paged:                       # page-align the derived width
+            max_seq += (-max_seq) % page_size
     for r in order:
         if r.max_new_tokens < 1:
             raise ValueError(f"request {r.rid}: max_new_tokens must be >= 1")
@@ -162,10 +291,36 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                 f"+ budget ({r.max_new_tokens}) exceeds max_seq ({max_seq})")
     steps_ = compiled if compiled is not None else compile_sched_steps(
         cfg, max_seq=max_seq, kernel_backend=kernel_backend,
-        act_bits=act_bits)
+        act_bits=act_bits, page_size=page_size if paged else 0)
+    if steps_.page_size != (page_size if paged else 0):
+        raise ValueError(
+            f"compiled step set was built for page_size={steps_.page_size}, "
+            f"run wants {'page_size=%d' % page_size if paged else 'dense'}")
     model = steps_.model
+    spec = model.cache_spec
 
-    cache = model.init_cache(slots, max_seq)
+    if paged:
+        if num_pages is None:
+            num_pages = slots * (max_seq // page_size)   # dense capacity
+        cstore = PagedCacheStore(model, slots=slots, max_seq=max_seq,
+                                 page_size=page_size, num_pages=num_pages)
+        for r in order:     # requests the pool can NEVER hold fail fast
+            need = cstore.pages_needed(_prefill_len(cfg, r)
+                                       + r.max_new_tokens)
+            if need > num_pages:
+                raise ValueError(
+                    f"request {r.rid} needs {need} pages but the pool only "
+                    f"has {num_pages} — it can never be admitted; raise "
+                    f"num_pages or lower the request's length")
+    else:
+        cstore = DenseCacheStore(model, slots=slots, max_seq=max_seq)
+    cache = cstore.cache
+    ptab_d = _push(cstore.ptab_h) if paged else None
+    # chunked prefill applies to chunkable families only; prefix sharing
+    # additionally needs the paged store (pages are the sharing unit)
+    chunk_ok = prefill_chunk > 0 and spec.chunkable
+    share_ok = share_prefix and paged and chunk_ok and spec.shareable
+
     tok = jnp.zeros((slots,), jnp.int32)
     pos = jnp.zeros((slots,), jnp.int32)
     active_h = np.zeros((slots,), bool)        # host mirror of occupancy
@@ -176,20 +331,66 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                    "finish_step": None, "tokens": [], "logits": []}
            for r in order}
     pending = deque(order)
+    inflight = None       # at most one chunked prefill in flight
     trace = []            # (active snapshot, slot->rid snapshot, tok)
     t = 0                 # scheduler clock, in decode steps dispatched
     steps = 0
     occupancy_acc = 0
     prefill_secs = 0.0
+    prompt_tokens = sum(_prefill_len(cfg, r) for r in order)
     t_start = time.time()
 
-    while pending or active_h.any():
+    def finish_prefill(s, req, tok0, lg1):
+        """Common post-prefill bookkeeping (whole or final chunk)."""
+        nonlocal tok, pos
+        tok = tok.at[s].set(tok0)
+        pos = pos.at[s].set(_prefill_len(cfg, req))
+        r = res[req.rid]
+        r["admit_step"] = t
+        r["tokens"].append(tok0)
+        if collect_logits:
+            r["logits"].append(np.asarray(lg1[0], np.float32))
+        if share_ok:
+            cstore.register_prefix(s, req.prompt)
+        if req.max_new_tokens == 1:
+            r["finish_step"] = t                 # done at prefill
+            cstore.release(s)
+            return False
+        slot_rid[s] = req.rid
+        remaining[s] = req.max_new_tokens - 1
+        active_h[s] = True
+        return True
+
+    while pending or active_h.any() or inflight is not None:
         # ---- admission: queued requests into free slots -------------------
-        dirty = False
-        while (pending and pending[0].arrival <= t
-               and not active_h.all()):
-            req = pending.popleft()
-            s = int(np.flatnonzero(~active_h)[0])
+        dirty = ptab_dirty = False
+        while pending and pending[0].arrival <= t:
+            busy = active_h.copy()
+            if inflight is not None:
+                if chunk_ok:
+                    break            # one in-flight chunked prefill at a time
+                busy[inflight["slot"]] = True
+            free = np.flatnonzero(~busy)
+            if len(free) == 0:
+                break
+            req = pending[0]
+            s = int(free[0])
+            total = _prefill_len(cfg, req) + req.max_new_tokens
+            plan = cstore.try_admit(s, total, prompt=req.prompt,
+                                    share=share_ok)
+            if plan is None:
+                break                # pool exhausted: FCFS head waits
+            pending.popleft()
+            ptab_dirty |= paged
+            if chunk_ok:
+                # slot + pages reserved; the prompt prefills one chunk per
+                # loop iteration, interleaved with decode below
+                inflight = {"req": req, "slot": s,
+                            "cursor": plan.shared_tokens,
+                            "c1": (None if paged
+                                   else model.init_cache(1, max_seq))}
+                continue
+            # ---- whole prefill at full cache width ------------------------
             tp0 = time.time()
             batch = {"tokens": jnp.asarray(req.prompt[None])}
             for k, v in (req.extras or {}).items():
@@ -197,36 +398,71 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
             c1 = model.init_cache(1, max_seq)
             lg1, c1 = steps_.prefill(params, batch, c1)
             tok0 = int(jnp.argmax(lg1[0], -1))   # the only per-admission sync
-            cache = steps_.write_slot(cache, c1, s)
-            tok = tok.at[s].set(tok0)
-            pos = pos.at[s].set(_prefill_len(cfg, req))
+            if paged:
+                cache = steps_.install(cache, c1, s, _push(cstore.ptab_h[s]),
+                                       plen=_prefill_len(cfg, req))
+            else:
+                cache = steps_.write_slot(cache, c1, s)
             # the argmax sync above already drained the dispatch queue, so
             # blocking here charges ONLY the slot install to the admission
             # window instead of letting it leak into decode_secs
             jax.block_until_ready(cache)
+            dirty |= finish_prefill(s, req, tok0, lg1)
+            ptab_dirty |= paged      # budget-1 admissions release pages
             prefill_secs += time.time() - tp0
-            r = res[req.rid]
-            r["admit_step"] = t
-            r["tokens"].append(tok0)
-            if collect_logits:
-                r["logits"].append(np.asarray(lg1[0], np.float32))
-            if req.max_new_tokens == 1:
-                r["finish_step"] = t             # done at prefill
+        # ---- one prefill chunk for the in-flight request ------------------
+        if inflight is not None:
+            tp0 = time.time()
+            req, s = inflight["req"], inflight["slot"]
+            cur = inflight["cursor"]
+            plen = len(req.prompt)   # chunkable families are text-only
+            end = min(cur + prefill_chunk, plen)
+            chunk = {"tokens": jnp.asarray(req.prompt[None, cur:end])}
+            if paged:
+                lg1, cache = steps_.prefill(params, chunk, cache, cur,
+                                            _push(cstore.ptab_h[s:s + 1]))
             else:
-                slot_rid[s] = req.rid
-                remaining[s] = req.max_new_tokens - 1
-                active_h[s] = True
-                dirty = True
+                lg1, inflight["c1"] = steps_.prefill(params, chunk,
+                                                     inflight["c1"], cur)
+            inflight["cursor"] = end
+            if end == plen:
+                tok0 = int(jnp.argmax(lg1[0], -1))
+                if not paged:
+                    cache = steps_.write_slot(cache, inflight["c1"], s)
+                jax.block_until_ready(cache)
+                dirty |= finish_prefill(s, req, tok0, lg1)
+                ptab_dirty |= paged
+                inflight = None
+            else:
+                jax.block_until_ready(lg1)   # honest prefill attribution
+            prefill_secs += time.time() - tp0
         if not active_h.any():
-            if not pending:
+            if not pending and inflight is None:
                 break
-            t = pending[0].arrival               # idle: jump to next arrival
+            if inflight is None:
+                if pending[0].arrival <= t:
+                    # nothing active or in flight -> every page is free, and
+                    # per-request pool fit was pre-validated; an admission
+                    # failure here is an allocator invariant break
+                    raise RuntimeError(
+                        f"scheduler stalled: request {pending[0].rid} not "
+                        f"admissible with an idle pool "
+                        f"(stats: {cstore.stats()})")
+                t = pending[0].arrival           # idle: jump to next arrival
+            else:
+                t += 1                           # chunk-only iteration
             continue
         if dirty:
             active_d = _push(active_h)
+        if ptab_dirty:
+            ptab_d = _push(cstore.ptab_h)
         # ---- one masked decode step over every slot -----------------------
-        logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
-                                                active_d)
+        if paged:
+            logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
+                                                    active_d, ptab_d)
+        else:
+            logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
+                                                    active_d)
         if collect_logits:
             # eager per-step fetch of ACTIVE rows only: bounded device
             # memory (regression-tested in tests/test_scheduler.py)
@@ -245,8 +481,11 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
             for s in np.flatnonzero(done):
                 res[slot_rid[s]]["finish_step"] = t
                 slot_rid[s] = -1
+                cstore.release(int(s))
             active_h[done] = False
             active_d = _push(active_h)
+            if paged:
+                ptab_d = _push(cstore.ptab_h)
 
     tok.block_until_ready()                      # close the timed region
     total_secs = time.time() - t_start
@@ -269,26 +508,25 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
         rr["latency_steps"] = rr["finish_step"] - rr["arrival"]
         latencies.append(rr["latency_steps"])
         useful += r.max_new_tokens
-    lat = np.asarray(latencies, np.float64)
     decode_tokens = useful - len(order)          # first tokens come from prefill
-    return {
-        "requests": res,
-        "slots": slots, "max_seq": max_seq, "steps": steps,
-        "useful_tokens": useful, "decode_tokens": decode_tokens,
-        "prefill_secs": prefill_secs, "decode_secs": decode_secs,
-        "decode_tok_s": decode_tokens / decode_secs,
-        "occupancy": (occupancy_acc / (steps * slots)) if steps else 0.0,
-        "latency_steps": {
-            "mean": float(lat.mean()), "p50": float(np.percentile(lat, 50)),
-            "p90": float(np.percentile(lat, 90)),
-            "p99": float(np.percentile(lat, 99)),
-        },
-    }
+    return ServeResult(
+        mode="scheduled", store=cstore.kind, requests=res,
+        slots=slots, max_seq=max_seq, steps=steps,
+        useful_tokens=useful, decode_tokens=decode_tokens,
+        prefill_secs=prefill_secs, decode_secs=decode_secs,
+        prefill_tok_s=prompt_tokens / max(prefill_secs, 1e-9),
+        decode_tok_s=decode_tokens / decode_secs,
+        occupancy=(occupancy_acc / (steps * slots)) if steps else 0.0,
+        latency_steps=_latency_stats(latencies),
+        cache_stats=cstore.stats(),
+        extra={"prefill_chunk": prefill_chunk if chunk_ok else 0,
+               "share_prefix": share_ok},
+    )
 
 
 def serve_lockstep(cfg: ModelConfig, model, params, requests: List[Request],
                    *, slots: int, kernel_backend=None, act_bits=None,
-                   compiled=None, pad_id: int = 0) -> dict:
+                   compiled=None, pad_id: int = 0) -> ServeResult:
     """The pre-scheduler serve loop as a baseline, at the SAME cache width.
 
     FCFS static batching: requests are grouped ``slots`` at a time in
@@ -305,6 +543,9 @@ def serve_lockstep(cfg: ModelConfig, model, params, requests: List[Request],
                                        act_bits=act_bits)
     prefill_secs = decode_secs = 0.0
     raw_decode_tokens = 0
+    prompt_tokens = 0
+    max_width = 0
+    steps = 0
     for i in range(0, len(order), slots):
         group = order[i:i + slots]
         plen = max(len(r.prompt) for r in group)
@@ -314,18 +555,33 @@ def serve_lockstep(cfg: ModelConfig, model, params, requests: List[Request],
             prompts[j, :len(r.prompt)] = r.prompt
         st = serve_requests(cfg, model, params, prompts, gen=gen,
                             compiled=compiled, collect_logits=False)
-        prefill_secs += st["prefill_secs"]
-        decode_secs += st["decode_secs"]
+        prefill_secs += st.prefill_secs
+        decode_secs += st.decode_secs
         raw_decode_tokens += len(group) * (gen - 1)
+        prompt_tokens += len(group) * plen
+        max_width = max(max_width, plen + gen)
+        steps += gen - 1
     useful = sum(r.max_new_tokens for r in order)
     decode_tokens = useful - len(order)
     decode_secs = max(decode_secs, 1e-9)
-    return {
-        "slots": slots, "useful_tokens": useful,
-        "decode_tokens": decode_tokens,
-        "raw_decode_tokens": raw_decode_tokens,
-        "wasted_decode_tokens": raw_decode_tokens - decode_tokens,
-        "prefill_secs": prefill_secs, "decode_secs": decode_secs,
+    # every request's latency is its group's padded span (batch max budget),
+    # measured like the scheduler: decode steps from arrival-batch start
+    lats = []
+    for i in range(0, len(order), slots):
+        group = order[i:i + slots]
+        lats += [max(r.max_new_tokens for r in group)] * len(group)
+    return ServeResult(
+        mode="lockstep", store="dense", requests={},
+        slots=slots, max_seq=max_width, steps=steps,
+        useful_tokens=useful, decode_tokens=decode_tokens,
+        prefill_secs=prefill_secs, decode_secs=decode_secs,
+        prefill_tok_s=prompt_tokens / max(prefill_secs, 1e-9),
         # useful-token goodput: same numerator the scheduler reports
-        "decode_tok_s": decode_tokens / decode_secs,
-    }
+        decode_tok_s=decode_tokens / decode_secs,
+        occupancy=(decode_tokens / raw_decode_tokens
+                   if raw_decode_tokens else 0.0),
+        latency_steps=_latency_stats(lats),
+        cache_stats={"store": "dense"},
+        extra={"raw_decode_tokens": raw_decode_tokens,
+               "wasted_decode_tokens": raw_decode_tokens - decode_tokens},
+    )

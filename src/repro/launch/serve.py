@@ -78,7 +78,7 @@ def build_params(cfg, params, qcfg: QuantConfig, data_cfg: DataConfig, *,
             print(f"[serve] serving FP {cfg.name} (no quantization)")
         return params, None
     if verbose:
-        print(f"[serve] calibrating {cfg.name} to {qcfg.tag()} "
+        print(f"[serve] calibrating {cfg.name} to {qcfg.tag} "
               f"with {method}+{init} ...")
     t0 = time.time()
     calib = calibration_batches(data_cfg, 2, max(2, calib_samples // 2))
@@ -105,19 +105,21 @@ def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None):
 
 def serve_requests(cfg, model, params, prompts, *, gen: int,
                    kernel_backend=None, act_bits=None, compiled=None,
-                   collect_logits=True, max_seq=None) -> dict:
+                   collect_logits=True, max_seq=None) -> "ServeResult":
     """Prefill + lock-step batched decode (uniform lengths, fixed ``gen``).
 
-    Returns {"tokens", "prefill_secs", "decode_secs", "prefill_tok_s",
-    "decode_tok_s", "logits"} — logits is the (B, V) prefill output plus
-    each decode step's, so callers can gate backend parity on them
-    (``collect_logits=False`` drops them for timing-only runs).
+    Returns a ``repro.launch.scheduler.ServeResult`` whose ``tokens``
+    property is the (B, gen) token matrix and whose ``logits`` property is
+    the (B, gen, V) stack of the prefill output plus each decode step's,
+    so callers can gate backend parity on them (``collect_logits=False``
+    drops them for timing-only runs).
     ``compiled``: a ``compile_serve_steps`` pair to reuse (built fresh
     otherwise).  Device->host transfers happen OUTSIDE the timed loop —
     the decode section times async step dispatch plus one final sync.
     ``max_seq`` overrides the cache width (default: exactly prompt+gen);
     the scheduler parity tests pass the scheduler's width so both runs
     reduce over identical cache extents."""
+    from repro.launch.scheduler import ServeResult, _latency_stats
     B, prompt_len = prompts.shape
     if max_seq is None:
         max_seq = prompt_len + gen
@@ -147,16 +149,28 @@ def serve_requests(cfg, model, params, prompts, *, gen: int,
             all_logits.append(logits)
     tok.block_until_ready()
     t_decode = time.time() - t0
-    return {
-        "tokens": np.stack([np.asarray(t) for t in toks], 1),
-        "logits": (np.stack([np.asarray(a, np.float32) for a in all_logits],
-                            1) if collect_logits else None),   # (B, gen, V)
-        "prefill_secs": t_prefill,
-        "decode_secs": t_decode,
-        "prefill_tok_s": B * prompt_len / max(t_prefill, 1e-9),
-        "decode_tok_s": (B * (gen - 1) / max(t_decode, 1e-9)
-                         if gen > 1 else 0.0),
-    }
+    tok_mat = np.stack([np.asarray(t) for t in toks], 1)       # (B, gen)
+    lg_mat = (np.stack([np.asarray(a, np.float32) for a in all_logits], 1)
+              if collect_logits else None)                     # (B, gen, V)
+    res = {b: {"tokens": tok_mat[b],
+               "logits": None if lg_mat is None else lg_mat[b],
+               "arrival": 0, "admit_step": 0, "finish_step": gen - 1,
+               "latency_steps": gen - 1}
+           for b in range(B)}
+    cache_bytes = sum(l.nbytes for l in jax.tree_util.tree_leaves(cache))
+    return ServeResult(
+        mode="uniform", store="dense", requests=res,
+        slots=B, max_seq=max_seq, steps=gen - 1,
+        useful_tokens=B * gen, decode_tokens=B * (gen - 1),
+        prefill_secs=t_prefill, decode_secs=t_decode,
+        prefill_tok_s=B * prompt_len / max(t_prefill, 1e-9),
+        decode_tok_s=(B * (gen - 1) / max(t_decode, 1e-9)
+                      if gen > 1 else 0.0),
+        occupancy=1.0,
+        latency_steps=_latency_stats([gen - 1] * B),
+        cache_stats={"store": "dense", "cache_bytes": cache_bytes,
+                     "slots": B, "max_seq": max_seq},
+    )
 
 
 def main(argv=None):
@@ -177,6 +191,18 @@ def main(argv=None):
                          "with this many slots over a seeded heterogeneous "
                          "workload (prompt lens up to --prompt-len, budgets "
                          "up to --gen); default: uniform lock-step loop")
+    ap.add_argument("--store", default="dense", choices=["dense", "paged"],
+                    help="KV cache store for --slots serving: dense per-slot "
+                         "lanes, or the paged pool + page-table layout")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged pool size (default: dense-capacity parity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk long prompts into this many tokens per "
+                         "decode iteration (chunkable families only)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="copy-on-write sharing of full prompt-prefix pages "
+                         "(paged store + chunked prefill only)")
     ap.add_argument("--calib-samples", type=int, default=8)
     ap.add_argument("--par-iters", type=int, default=4)
     ap.add_argument("--par-steps", type=int, default=20)
@@ -214,18 +240,31 @@ def main(argv=None):
                              budgets=(min(2, args.gen), args.gen))
         sched = serve_scheduled(cfg, served, reqs, slots=args.slots,
                                 kernel_backend=qcfg.kernel_backend,
-                                act_bits=act)
-        lat = sched["latency_steps"]
+                                act_bits=act, store=args.store,
+                                page_size=args.page_size,
+                                num_pages=args.num_pages,
+                                prefill_chunk=args.prefill_chunk,
+                                share_prefix=args.share_prefix)
+        lat = sched.latency_steps
         print(f"[serve] scheduled {args.requests} requests over "
-              f"{args.slots} slots in {sched['steps']} decode steps "
-              f"({sched['useful_tokens']} useful tokens, occupancy "
-              f"{sched['occupancy']:.2f}, decode "
-              f"{sched['decode_tok_s']:.1f} tok/s, backend={args.backend})")
+              f"{args.slots} slots in {sched.steps} decode steps "
+              f"({sched.useful_tokens} useful tokens, occupancy "
+              f"{sched.occupancy:.2f}, decode "
+              f"{sched.decode_tok_s:.1f} tok/s, backend={args.backend})")
         print(f"[serve] latency (decode steps): mean {lat['mean']:.1f} "
               f"p50 {lat['p50']:.0f} p90 {lat['p90']:.0f} "
               f"p99 {lat['p99']:.0f}")
+        cs = sched.cache_stats
+        if sched.store == "paged":
+            print(f"[serve] paged cache: {cs['cache_bytes'] / 1e6:.2f} MB, "
+                  f"{cs['num_pages']} pages x {cs['page_size']} tokens, "
+                  f"peak in use {cs['peak_pages_in_use']}, refused "
+                  f"{cs['refused_admissions']}, shared-page hits "
+                  f"{cs['shared_page_hits']}")
+        else:
+            print(f"[serve] dense cache: {cs['cache_bytes'] / 1e6:.2f} MB")
         for r in reqs[:4]:
-            rr = sched["requests"][r.rid]
+            rr = sched.requests[r.rid]
             print(f"  req{r.rid}: plen={len(r.prompt)} "
                   f"budget={r.max_new_tokens} arrive@{r.arrival} "
                   f"admit@{rr['admit_step']} finish@{rr['finish_step']} -> "
@@ -238,15 +277,16 @@ def main(argv=None):
     stats = serve_requests(cfg, model, served, prompts, gen=args.gen,
                            kernel_backend=qcfg.kernel_backend, act_bits=act)
     B, gen = args.requests, args.gen
-    dt = stats["prefill_secs"] + stats["decode_secs"]
+    dt = stats.prefill_secs + stats.decode_secs
     print(f"[serve] {B} requests x {gen} tokens in {dt:.2f}s "
-          f"(prefill {stats['prefill_tok_s']:.1f} tok/s, decode "
-          f"{stats['decode_tok_s']:.1f} tok/s, backend={args.backend}, "
+          f"(prefill {stats.prefill_tok_s:.1f} tok/s, decode "
+          f"{stats.decode_tok_s:.1f} tok/s, backend={args.backend}, "
           f"CPU simulation)")
     print("[serve] sample generations (token ids):")
+    toks = stats.tokens
     for b in range(min(B, 4)):
         print(f"  req{b}: {prompts[b][-8:].tolist()} -> "
-              f"{stats['tokens'][b][:12].tolist()}")
+              f"{toks[b][:12].tolist()}")
     return 0
 
 

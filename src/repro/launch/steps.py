@@ -14,30 +14,28 @@ from repro.configs.base import ModelConfig, QuantConfig, ShapeConfig
 from repro.core.blocks import QUANT_LEAF_NAMES
 from repro.core.qtensor import PACK_FACTOR, QTensor
 from repro.core.quantizer import resolve_group
-from repro.launch.mesh import dp_axes, tp_axis
-from repro.launch.sharding import (batch_shardings, make_sharder,
-                                   param_shardings)
+from repro.launch.sharding import batch_shardings, param_shardings
 from repro.models import get_model
-from repro.models.common import Ctx
+from repro.models.common import (Ctx, _get_leaf, _set_leaf, page_write_tokens)
+from repro.models.common import make_ctx as _common_make_ctx
 from repro.optim.adam import AdamW, clip_by_global_norm
 from repro.optim.compression import compress_decompress, init_error
 
 
 def make_ctx(cfg: ModelConfig, mesh=None, *, act_bits=None, decode=False,
              attn_chunk=512, remat=None, shard_overrides=None,
-             kernel_backend=None) -> Ctx:
-    # (shard_overrides: logical-axis remaps, e.g. {"seq": ("model",)} for
-    # attention sequence parallelism — the worst-fraction hillclimb knob)
-    if mesh is None:
-        return Ctx(act_bits=act_bits, attn_chunk=attn_chunk,
-                   remat=cfg.remat if remat is None else remat, decode=decode,
-                   kernel_backend=kernel_backend)
-    ep = tp_axis(mesh) if cfg.family == "moe" else None
-    return Ctx(shard=make_sharder(mesh, shard_overrides), mesh=mesh, ep_axis=ep,
-               dp_axes=dp_axes(mesh), act_bits=act_bits,
-               attn_chunk=attn_chunk,
-               remat=cfg.remat if remat is None else remat, decode=decode,
-               kernel_backend=kernel_backend)
+             kernel_backend=None, **overrides) -> Ctx:
+    """Launch-layer shim over ``models.common.make_ctx`` — THE blessed Ctx
+    constructor (kernel_backend/kv_bits/page_size validation, unknown-kwarg
+    rejection) — keeping this module's historical positional-``mesh``
+    signature for its many call sites.
+    (shard_overrides: logical-axis remaps, e.g. {"seq": ("model",)} for
+    attention sequence parallelism — the worst-fraction hillclimb knob)"""
+    return _common_make_ctx(cfg, mesh=mesh, decode=decode,
+                            shard_overrides=shard_overrides,
+                            act_bits=act_bits, attn_chunk=attn_chunk,
+                            remat=remat, kernel_backend=kernel_backend,
+                            **overrides)
 
 
 # --------------------------------------------------------------------------
@@ -186,30 +184,37 @@ def quantize_param_struct(params_struct, cfg: ModelConfig, qcfg: QuantConfig):
 
 def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
                      attn_chunk: int = 512, extra_overrides=None,
-                     kv_bits=None, kernel_backend=None):
+                     kv_bits=None, kernel_backend=None,
+                     decode_attn_chunk: int = 1 << 30, page_size: int = 0):
     """``kernel_backend`` ("xla" | "pallas" | None = env/default) selects the
     QTensor matmul path for BOTH the prefill and decode steps — this is the
-    explicit per-run dispatch the serving launcher and benchmarks use."""
+    explicit per-run dispatch the serving launcher and benchmarks use.
+
+    ``decode_attn_chunk`` defaults to un-chunked decode attention (single
+    scan trip — the score row is tiny and GSPMD can then partition the
+    softmax reduction over a sequence-sharded KV cache); the dense-vs-paged
+    pallas parity tests pin it to ``page_size`` so both kernels walk the
+    same chunk grid.  ``page_size > 0`` builds paged-cache steps: prefill
+    accepts ``start_pos``/``ptab`` (chunked prefill over a page table) and
+    decode accepts ``ptab``."""
     model = get_model(cfg)
-    import dataclasses as _dc
     ctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
                    remat=False, shard_overrides=extra_overrides,
-                   kernel_backend=kernel_backend)
-    ctx = _dc.replace(ctx, kv_bits=kv_bits)
-    # decode: Sq == 1, so run attention un-chunked (single scan trip) — the
-    # score row is tiny and GSPMD can then partition the softmax reduction
-    # over a sequence-sharded KV cache (GQA kv_heads < TP case)
-    dctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=1 << 30,
+                   kernel_backend=kernel_backend, kv_bits=kv_bits,
+                   page_size=page_size)
+    dctx = make_ctx(cfg, mesh, act_bits=act_bits,
+                    attn_chunk=decode_attn_chunk,
                     remat=False, decode=True, shard_overrides=extra_overrides,
-                    kernel_backend=kernel_backend)
-    dctx = _dc.replace(dctx, kv_bits=kv_bits)
+                    kernel_backend=kernel_backend, kv_bits=kv_bits,
+                    page_size=page_size)
 
-    def prefill_step(params, batch, cache):
-        return model.prefill(params, batch, cache, ctx)
+    def prefill_step(params, batch, cache, start_pos=0, ptab=None):
+        return model.prefill(params, batch, cache, ctx,
+                             start_pos=start_pos, ptab=ptab)
 
-    def decode_step(params, cache, tokens, pos, active=None):
+    def decode_step(params, cache, tokens, pos, active=None, ptab=None):
         return model.decode_step(params, cache, tokens, pos, dctx,
-                                 active=active)
+                                 active=active, ptab=ptab)
 
     return model, prefill_step, decode_step
 
@@ -226,9 +231,45 @@ def cache_donate_argnums(*argnums: int) -> tuple:
     return argnums
 
 
+def make_paged_install_step(model, *, page_size: int):
+    """Admission step for the paged store, non-chunked path: move a B=1
+    request cache (prefilled dense at full ``max_seq`` width — EXACTLY the
+    computation dense admission runs, which is what makes paged admission
+    trivially bit-identical) into the slot's pages.
+
+    Token leaves scatter rows ``[0, plen)`` into the pool pages named by
+    ``ptab_row``; state/fixed leaves take the classic ``write_slot`` path.
+    ``plen`` is static (one jit specialization per distinct prefill length,
+    the same compile cost profile as the per-length prefill itself)."""
+    spec = model.cache_spec
+    token_paths = set(spec.token_paths)
+
+    def install(cache, c1, slot, ptab_row, *, plen: int):
+        out = cache
+        zero = jnp.zeros((1,), jnp.int32)
+        for path, _ls in spec.leaves:
+            src = _get_leaf(c1, path)
+            dst = _get_leaf(out, path)
+            if path in token_paths:
+                # (lead, 1, max_seq, *tail) -> (lead, plen, *tail)
+                vals = jax.lax.slice_in_dim(src, 0, plen, axis=2)[:, 0]
+                new = jax.vmap(
+                    lambda pool, v: page_write_tokens(
+                        pool, v[None], ptab_row[None], zero, page_size)
+                )(dst, vals)
+            else:
+                new = jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), slot, axis=spec.slot_axis)
+            out = _set_leaf(out, path, new)
+        return out
+
+    return install
+
+
 def make_sched_steps(cfg: ModelConfig, mesh=None, *, max_seq: int,
                      act_bits=None, attn_chunk: int = 512,
-                     extra_overrides=None, kv_bits=None, kernel_backend=None):
+                     extra_overrides=None, kv_bits=None, kernel_backend=None,
+                     decode_attn_chunk: int = 1 << 30, page_size: int = 0):
     """Step pair for the slot scheduler (``repro.launch.scheduler``).
 
     Returns ``(model, prefill_step, sched_decode_step)``.  The decode step
@@ -252,14 +293,18 @@ def make_sched_steps(cfg: ModelConfig, mesh=None, *, max_seq: int,
     model, prefill_step, decode_step = make_serve_steps(
         cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
         extra_overrides=extra_overrides, kv_bits=kv_bits,
-        kernel_backend=kernel_backend)
+        kernel_backend=kernel_backend, decode_attn_chunk=decode_attn_chunk,
+        page_size=page_size)
 
-    def sched_decode_step(params, cache, tok, pos, active):
+    def sched_decode_step(params, cache, tok, pos, active, ptab=None):
         write_pos = jnp.where(active, pos, max_seq)
         # occupancy reaches the kernel: the slot-aware decode attention
-        # skips dead slots instead of computing-then-masking their rows
+        # skips dead slots instead of computing-then-masking their rows.
+        # (paged: write_pos == max_seq maps past the page table, where
+        # page_write_tokens' sentinel index drops the write — the paged
+        # analog of update_cache's out-of-range masked no-op)
         logits, cache = decode_step(params, cache, tok, write_pos,
-                                    active=active)
+                                    active=active, ptab=ptab)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         tok = jnp.where(active, nxt, tok)
         pos = jnp.where(active, pos + 1, pos)

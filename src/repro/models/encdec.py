@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 update_cache)
+                                 page_update_cache, update_cache)
 
 
 def _init_attn(ks, d, n_heads_d, kv_heads_d, hd, n_layers, dt):
@@ -63,11 +63,13 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
-          cache_pos=None, kv_len=None, precomputed_kv=None, active=None):
+          cache_pos=None, kv_len=None, precomputed_kv=None, active=None,
+          ptab=None):
     B, S, d = x.shape
     hd = cfg.resolved_head_dim
     kb = ctx.kernel_backend
     q = L.matmul(x, ap["wq"], kb).reshape(B, S, cfg.num_heads, hd)
+    pages_arg = None
     if precomputed_kv is not None:
         k, v = precomputed_kv
         new_kv = None
@@ -78,12 +80,18 @@ def _attn(ap, x, kv_src, cfg, ctx, *, causal, q_offset=0, kv_cache=None,
             B, kv_src.shape[1], cfg.num_kv_heads, hd)
         new_kv = None
         if kv_cache is not None:
-            ck, cv = update_cache(kv_cache["k"], kv_cache["v"], k, v, cache_pos)
+            if ctx.page_size > 0 and ptab is not None:
+                ck, cv = page_update_cache(kv_cache["k"], kv_cache["v"], k, v,
+                                           cache_pos, ptab, ctx.page_size)
+                pages_arg = (ptab, ctx.page_size)
+            else:
+                ck, cv = update_cache(kv_cache["k"], kv_cache["v"], k, v,
+                                      cache_pos)
             new_kv = {"k": ck, "v": cv}
             k, v = ck, cv
     o = L.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
                           kv_len=kv_len, chunk=ctx.attn_chunk,
-                          backend=kb, active=active)
+                          backend=kb, active=active, pages=pages_arg)
     o = o.reshape(B, S, cfg.num_heads * hd)
     return L.matmul(o, ap["wo"], kb), new_kv
 
@@ -108,13 +116,15 @@ def encoder_block(bp, x, cfg, ctx):
 
 
 def decoder_block(bp, x, enc_out, cfg, ctx, *, q_offset=0, self_kv=None,
-                  cache_pos=None, kv_len=None, cross_kv=None, active=None):
+                  cache_pos=None, kv_len=None, cross_kv=None, active=None,
+                  ptab=None):
     h = L.layer_norm(x, bp["ln1"], jnp.zeros_like(bp["ln1"]), cfg.norm_eps)
     if ctx.act_bits:
         h = L.fake_quant_act(h, ctx.act_bits)
     a, new_self = _attn(bp["attn"], h, h, cfg, ctx, causal=True,
                         q_offset=q_offset, kv_cache=self_kv,
-                        cache_pos=cache_pos, kv_len=kv_len, active=active)
+                        cache_pos=cache_pos, kv_len=kv_len, active=active,
+                        ptab=ptab)
     x = x + a
     hx = L.layer_norm(x, bp["ln_x"], jnp.zeros_like(bp["ln_x"]), cfg.norm_eps)
     if ctx.act_bits:
@@ -181,7 +191,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
 
 
 def prefill(params, cfg: ModelConfig, frames, tokens, cache,
-            ctx: Ctx = DEFAULT_CTX):
+            ctx: Ctx = DEFAULT_CTX, *, ptab=None):
     enc = encode(params, cfg, frames, ctx)
     B, S = tokens.shape
     x = params["embed"][tokens]
@@ -198,7 +208,8 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
             B, -1, cfg.num_kv_heads, hd)
         h, new_self = decoder_block(bp, h, enc, cfg, ctx,
                                     self_kv={"k": sk, "v": sv},
-                                    cache_pos=pos0, cross_kv=(ck, cv))
+                                    cache_pos=pos0, cross_kv=(ck, cv),
+                                    ptab=ptab)
         return h, (new_self["k"], new_self["v"], ck, cv)
 
     x, (nk, nv, ck, cv) = layer_loop(
@@ -213,11 +224,18 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX, *, active=None):
+                ctx: Ctx = DEFAULT_CTX, *, active=None, ptab=None):
     B = tokens.shape[0]
     x = params["embed"][tokens][:, None, :]
-    # position embedding at the current position (gather one row per request)
-    pe = L.sinusoidal_pos(int(cache["self_k"].shape[2]), cfg.d_model, x.dtype)
+    # position embedding at the current position (gather one row per request).
+    # Width comes from the page table under paging — the pool's axis 2 is
+    # page_size, NOT the logical sequence; pe rows are position-local, so
+    # any width covering max pos is value-identical to the dense case.
+    if ctx.page_size > 0 and ptab is not None:
+        pe_len = ptab.shape[1] * ctx.page_size
+    else:
+        pe_len = int(cache["self_k"].shape[2])
+    pe = L.sinusoidal_pos(pe_len, cfg.d_model, x.dtype)
     x = x + pe[pos][:, None, :]
 
     def step(h, layer):
@@ -225,7 +243,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
         h, new_self = decoder_block(bp, h, None, cfg, ctx, q_offset=pos,
                                     self_kv={"k": sk, "v": sv}, cache_pos=pos,
                                     kv_len=pos + 1, cross_kv=(ck, cv),
-                                    active=active)
+                                    active=active, ptab=ptab)
         return h, (new_self["k"], new_self["v"])
 
     x, (nk, nv) = layer_loop(

@@ -43,12 +43,12 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 
 def _shared_block(params, x, cfg, ctx, *, positions, kv_cache=None,
-                  cache_pos=None, kv_len=None, active=None):
+                  cache_pos=None, kv_len=None, active=None, ptab=None):
     bp = take_layer(params["shared_attn"], 0)
     return transformer.block(bp, x, cfg.replace(family="dense"), ctx,
                              positions=positions, kv_cache=kv_cache,
                              cache_pos=cache_pos, kv_len=kv_len,
-                             active=active)
+                             active=active, ptab=ptab)
 
 
 def _slice_seg(tree, s, e):
@@ -96,7 +96,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
 
 
 def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode,
-         active=None):
+         active=None, ptab=None):
     """Shared prefill/decode body over segments."""
     new_mamba_conv, new_mamba_ssm = [], []
     new_k, new_v = [], []
@@ -117,7 +117,7 @@ def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode,
             kv = {"k": cache["attn_k"][site], "v": cache["attn_v"][site]}
             x, nkv = _shared_block(params, x, cfg, ctx, positions=positions,
                                    kv_cache=kv, cache_pos=cache_pos,
-                                   kv_len=kv_len, active=active)
+                                   kv_len=kv_len, active=active, ptab=ptab)
             new_k.append(nkv["k"])
             new_v.append(nkv["v"])
             site += 1
@@ -130,23 +130,24 @@ def _run(params, cfg, x, cache, ctx, *, positions, cache_pos, kv_len, decode,
     return x, new_cache
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX):
+def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX,
+            *, ptab=None):
     x = params["embed"][tokens]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
     B, S = tokens.shape
     pos0 = jnp.zeros((B,), jnp.int32)
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=jnp.arange(S),
-                        cache_pos=pos0, kv_len=None, decode=False)
+                        cache_pos=pos0, kv_len=None, decode=False, ptab=ptab)
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
     return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX, *, active=None):
+                ctx: Ctx = DEFAULT_CTX, *, active=None, ptab=None):
     x = params["embed"][tokens][:, None, :]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=pos[:, None],
                         cache_pos=pos, kv_len=pos + 1, decode=True,
-                        active=active)
+                        active=active, ptab=ptab)
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     return L.matmul(x, params["head"], ctx.kernel_backend)[:, 0], new_cache

@@ -220,7 +220,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: Optional[float] = None,
                     prefix_len: Optional[int] = None,
                     backend: Optional[str] = None,
-                    active: Optional[jax.Array] = None) -> jax.Array:
+                    active: Optional[jax.Array] = None,
+                    pages: Optional[tuple] = None) -> jax.Array:
     """Chunked attention with GQA support.
 
     q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
@@ -231,11 +232,35 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     layout directly and skips inactive slots via ``active`` ((B,) occupancy,
     None = all live) and the ragged ``kv_len`` instead of masking post-hoc.
     Inactive rows come back zero.
+
+    ``pages = (ptab, page_size)`` marks k/v as page POOLS (num_pages,
+    page_size, Hkv, D) indexed by the (B, W) page table ``ptab``.  The
+    pallas decode step walks the table inside the kernel (no gather); every
+    other path gathers the virtual slot-major cache — shaped exactly like
+    the dense lane, W*page_size == Sk — and proceeds unchanged, which is
+    what makes paged attention bit-identical to dense.
     """
     B, Sq, Hq, D = q.shape
-    _, Sk, Hkv, _ = k.shape
+    Hkv = k.shape[2]
     G = Hq // Hkv
     scale = scale if scale is not None else D ** -0.5
+
+    if pages is not None:
+        ptab, page_size = pages
+        if (Sq == 1 and causal and kv_len is not None and prefix_len is None
+                and resolve_backend(backend) == "pallas"):
+            from repro.kernels.ops import paged_decode_attention_op
+            q_pos = jnp.broadcast_to(
+                jnp.asarray(q_offset, jnp.int32).reshape(-1), (B,))
+            out = paged_decode_attention_op(
+                q.reshape(B, Hkv, G, D), k, v, ptab, kv_len=kv_len,
+                q_pos=q_pos, active=active, scale=scale)
+            return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+        from repro.models.common import gather_pages
+        k = gather_pages(k, ptab)
+        v = gather_pages(v, ptab)
+
+    Sk = k.shape[1]
 
     if (Sq == 1 and causal and kv_len is not None and prefix_len is None
             and resolve_backend(backend) == "pallas"):

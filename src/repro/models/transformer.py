@@ -13,8 +13,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 update_cache)
+from repro.models.common import (Ctx, DEFAULT_CTX, gather_pages, layer_loop,
+                                 maybe_remat, page_update_cache, update_cache)
 from repro.models.moe import init_moe_ffn, moe_ffn
 
 
@@ -70,8 +70,15 @@ def init_params(cfg: ModelConfig, key) -> dict:
 
 def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
               positions, kv_cache=None, cache_pos=None, kv_len=None,
-              prefix_len: Optional[int] = None, active=None):
-    """Self-attention with optional KV cache.  Returns (out, new_kv or None)."""
+              prefix_len: Optional[int] = None, active=None, ptab=None):
+    """Self-attention with optional KV cache.  Returns (out, new_kv or None).
+
+    ``ptab`` (B, W) int32 + ``ctx.page_size > 0`` switches the cache to
+    paged mode: the k/v leaves are page POOLS (num_pages, page_size, H, D)
+    shared across slots, writes scatter through the page table, and reads
+    either walk the table in the pallas decode kernel or gather a virtual
+    slot-major cache whose shape equals the dense lane — which is what
+    keeps paged outputs bit-identical to dense under exact masking."""
     Bb, S, d = x.shape
     hd = cfg.resolved_head_dim
     h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -89,6 +96,7 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
     v = ctx.shard(v, ("batch", "seq", "kv_heads", None))
 
     new_kv = None
+    pages_arg = None
     if kv_cache is not None:
         ks, vs = k, v
         if ctx.kv_bits:
@@ -97,13 +105,25 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
                 jnp.round(a.astype(jnp.float32) / ctx.kv_scale),
                 -qmax - 1, qmax).astype(kv_cache["k"].dtype)
             ks, vs = quant(k), quant(v)
-        ck, cv = update_cache(kv_cache["k"], kv_cache["v"], ks, vs, cache_pos)
+        paged = ctx.page_size > 0 and ptab is not None
+        if paged:
+            ck, cv = page_update_cache(kv_cache["k"], kv_cache["v"], ks, vs,
+                                       cache_pos, ptab, ctx.page_size)
+        else:
+            ck, cv = update_cache(kv_cache["k"], kv_cache["v"], ks, vs,
+                                  cache_pos)
         new_kv = {"k": ck, "v": cv}
         if ctx.kv_bits:
+            # int8 pools dequantize AFTER gathering (the pallas paged walk
+            # is fp-only, so paged int8 KV takes the gather + dense path)
+            if paged:
+                ck, cv = gather_pages(ck, ptab), gather_pages(cv, ptab)
             attn_k = ck.astype(x.dtype) * jnp.asarray(ctx.kv_scale, x.dtype)
             attn_v = cv.astype(x.dtype) * jnp.asarray(ctx.kv_scale, x.dtype)
         else:
             attn_k, attn_v = ck, cv
+            if paged:
+                pages_arg = (ptab, ctx.page_size)
         q_offset = cache_pos
         valid = kv_len if kv_len is not None else cache_pos + S
     else:
@@ -113,7 +133,8 @@ def attention(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx, *,
 
     o = L.flash_attention(q, attn_k, attn_v, causal=True, q_offset=q_offset,
                           kv_len=valid, chunk=ctx.attn_chunk,
-                          prefix_len=prefix_len, backend=kb, active=active)
+                          prefix_len=prefix_len, backend=kb, active=active,
+                          pages=pages_arg)
     o = o.reshape(Bb, S, cfg.num_heads * hd)
     if ctx.act_bits:
         o = L.fake_quant_act(o, ctx.act_bits)
@@ -137,10 +158,11 @@ def ffn(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
 
 def block(bp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx = DEFAULT_CTX, *,
           positions, kv_cache=None, cache_pos=None, kv_len=None,
-          prefix_len=None, active=None):
+          prefix_len=None, active=None, ptab=None):
     a, new_kv = attention(bp, x, cfg, ctx, positions=positions,
                           kv_cache=kv_cache, cache_pos=cache_pos,
-                          kv_len=kv_len, prefix_len=prefix_len, active=active)
+                          kv_len=kv_len, prefix_len=prefix_len, active=active,
+                          ptab=ptab)
     x = x + a
     x = x + ffn(bp, x, cfg, ctx)
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
@@ -207,18 +229,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,
-            inputs_embeds=None, prefix_len=None):
-    """Fill cache from position 0; returns (last_logits (B,V), cache)."""
+            inputs_embeds=None, prefix_len=None, start_pos=0, ptab=None):
+    """Fill cache from position ``start_pos``; returns (last_logits, cache).
+
+    ``start_pos > 0`` resumes a chunked prefill: this call's tokens are
+    positions [start_pos, start_pos + S) and attend causally over the
+    cache contents written by earlier chunks (plus themselves).  Every
+    per-position op is row-independent and masked lanes are exact -1e30
+    no-ops, so chunking changes reduction grouping only — and not even
+    that when dense and paged runs use the SAME chunk schedule."""
     x = inputs_embeds if inputs_embeds is not None else embed_tokens(params, cfg, tokens)
     B, S = x.shape[:2]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
-    positions = jnp.arange(S)
-    pos0 = jnp.zeros((B,), jnp.int32)
+    positions = jnp.asarray(start_pos, jnp.int32) + jnp.arange(S)
+    pos0 = jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32), (B,))
 
     def step(h, layer):
         bp, kv = layer
         h, new_kv = block(bp, h, cfg, ctx, positions=positions, kv_cache=kv,
-                          cache_pos=pos0, prefix_len=prefix_len)
+                          cache_pos=pos0, prefix_len=prefix_len, ptab=ptab)
         return h, new_kv
 
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),
@@ -229,10 +258,11 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
-                ctx: Ctx = DEFAULT_CTX, *, active=None):
+                ctx: Ctx = DEFAULT_CTX, *, active=None, ptab=None):
     """One decode step. tokens: (B,), pos: (B,) current write position.
     ``active``: (B,) slot-occupancy vector from the scheduler — the
-    slot-aware decode attention kernel skips dead slots entirely."""
+    slot-aware decode attention kernel skips dead slots entirely.
+    ``ptab``: (B, W) page table when the cache is a page pool."""
     x = embed_tokens(params, cfg, tokens)[:, None, :]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
 
@@ -240,7 +270,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
         bp, kv = layer
         h, new_kv = block(bp, h, cfg, ctx, positions=pos[:, None],
                           kv_cache=kv, cache_pos=pos, kv_len=pos + 1,
-                          active=active)
+                          active=active, ptab=ptab)
         return h, new_kv
 
     x, new_cache = layer_loop(step, x, (params["blocks"], cache),

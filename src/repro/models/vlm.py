@@ -43,7 +43,7 @@ def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
 
 
 def prefill(params, cfg: ModelConfig, patches, tokens, cache,
-            ctx: Ctx = DEFAULT_CTX):
+            ctx: Ctx = DEFAULT_CTX, *, ptab=None):
     x = assemble_inputs(params, cfg, patches, tokens)
     return transformer.prefill(params, cfg, None, cache, ctx, inputs_embeds=x,
-                               prefix_len=cfg.num_patches)
+                               prefix_len=cfg.num_patches, ptab=ptab)

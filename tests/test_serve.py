@@ -29,6 +29,20 @@ def test_parse_quant_malformed(tag):
         parse_quant(tag)
 
 
+def test_quant_tag_roundtrip():
+    """QuantConfig.tag is the canonical serialization: parse_quant(q.tag)
+    reproduces q exactly, so BENCH/EVAL row keys feed back into the CLI."""
+    from repro.configs.base import QuantConfig
+    for q in (QuantConfig(bits=4, group_size=32),
+              QuantConfig(bits=2, group_size=None, act_bits=8),
+              QuantConfig(bits=3, group_size=128),
+              QuantConfig(bits=8, group_size=64, act_bits=8),
+              QuantConfig(bits=2, group_size=32, act_bits=None)):
+        assert parse_quant(q.tag) == q, q.tag
+    assert parse_quant("W4A16g32").tag == "W4A16g32"
+    assert parse_quant("W2A8").tag == "W2A8"
+
+
 def test_parse_quant_zero_group():
     with pytest.raises(ValueError, match="group size must be a positive"):
         parse_quant("W4A16g0")
