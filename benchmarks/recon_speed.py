@@ -40,6 +40,15 @@ With multiple devices it additionally runs:
     deployment artifact absorbs it (``tests/test_recon_engine.py`` pins
     full bit-exactness, scales included, at the unit-test scales).
 
+With a model axis available (even device counts) it also runs the
+``tp_vs_device`` parity gate — the sharded engine on a ("data","model")
+mesh, rounding variables and Adam state TP-sharded per the ParamSpec
+contract, must still match the device engine bit-for-bit — and with >= 8
+devices the ``pipeline_efficiency`` gate: a pod-pipelined
+``quantize_model`` walk of llama3-405b-smoke on a ("pod","data","model")
+mesh whose cross-pod capture prefetch must hide >= 70% of the target
+forwards behind reconstruction.
+
 Every gate lands in ``BENCH_recon.json`` under ``gates`` as an explicit
 ``{name, threshold, measured, ok, cmp}`` record (plus the legacy ``checks``
 map), so a regression can never ship green without leaving a paper trail:
@@ -70,7 +79,7 @@ from repro.core import recon_engine as RE
 from repro.core import tesseraq as TQ
 from repro.core.blocks import build_stages
 from repro.core.rtn import quantize_block_rtn
-from repro.launch.mesh import dp_size, make_data_mesh
+from repro.launch.mesh import dp_size, make_data_mesh, make_mesh, tp_size
 from repro.models import get_model
 
 
@@ -283,6 +292,78 @@ def main(argv=None):
             ok_all &= _gate(out, "sharded_vs_device_throughput",
                             threshold=1.0, measured=sharded_vs_dev,
                             ok=sharded_vs_dev >= 1.0, cmp=">=")
+
+    # tensor-parallel parity gate: the sharded engine on a ("data","model")
+    # mesh (rounding/DST variables, weights and Adam state sharded per the
+    # launch.sharding.ParamSpec contract) must reproduce the device
+    # engine's hardened masks and packed codes bit-for-bit, folded scales
+    # within 1e-5 — the device-count-invariance contract extended to TP
+    if n_dev >= 2 and n_dev % 2 == 0:
+        tp = 4 if n_dev % 8 == 0 else 2
+        mesh_tp = make_mesh((n_dev // tp, tp))
+        dp_tp = dp_size(mesh_tp)
+        bs_tp = max(dp_tp, min(4 * dp_tp, X.shape[0]))
+        if RE.grad_chunk_count(bs_tp, X.shape[0]) % dp_tp:
+            out["tp_skipped"] = (
+                f"DP degree {dp_tp} does not divide the canonical chunk "
+                f"count at bs={bs_tp}, pool={X.shape[0]}")
+            print(f"tp section skipped: {out['tp_skipped']}")
+        else:
+            out["tp_mesh"] = {"data": dp_tp, "model": tp_size(mesh_tp)}
+            PK, PT = 3, 15
+            metas_tp = {}
+            cache_tp = {}
+            for engine, m_ in (("device", None), ("sharded", mesh_tp)):
+                tcfg = TQ.TesseraQConfig(par_iterations=PK,
+                                         steps_per_iteration=PT,
+                                         batch_size=bs_tp, engine=engine,
+                                         mesh=m_)
+                _, metas_tp[engine] = run_engine(
+                    engine, apply, bp, X, Y, qmeta, qcfg, tcfg,
+                    with_log=False, cache=cache_tp)
+            ok_tp, why_tp = _meta_parity(metas_tp["device"],
+                                         metas_tp["sharded"])
+            out["checks"]["tp_eq_device"] = {
+                "ok": ok_tp, "why": why_tp, "par_k": PK, "steps_t": PT,
+                "dp": dp_tp, "tp": tp_size(mesh_tp)}
+            print(f"check: TP-sharded (dp={dp_tp}, tp={tp_size(mesh_tp)}) "
+                  f"== device (mask+codes bit-for-bit, K={PK} T={PT}): "
+                  f"{'PASS' if ok_tp else 'FAIL'} ({why_tp})")
+            ok_all &= _gate(out, "tp_vs_device", threshold=1.0,
+                            measured=float(ok_tp), ok=ok_tp, cmp=">=")
+
+    # pod-pipelined block walk: quantize the llama3-405b-smoke config on a
+    # ("pod","data","model") mesh and gate the pipeline's steady-state
+    # efficiency (reconstruction time over reconstruction + residual
+    # prefetch wait) — the cross-pod capture prefetch must actually hide
+    # the target forwards, not serialize behind them
+    if n_dev >= 8 and n_dev % 8 == 0:
+        from repro.configs import get_reduced_config as _grc
+        from repro.core.pipeline import quantize_model
+        pcfg = _grc("llama3-405b")
+        pm = get_model(pcfg)
+        pparams = pm.init_params(jax.random.PRNGKey(0))
+        prng = np.random.default_rng(0)
+        pbatches = [{"tokens": jnp.asarray(
+            prng.integers(0, pcfg.vocab_size, (8, 16)))}]
+        mesh3 = make_mesh((2, 2, 2))
+        ptcfg = TQ.TesseraQConfig(
+            par_iterations=K, steps_per_iteration=T, batch_size=4,
+            engine="sharded", mesh=mesh3)
+        t0 = time.time()
+        _, _, prep = quantize_model(
+            pcfg, pparams, pbatches, qcfg, method="tesseraq",
+            init="rtn", tcfg=ptcfg)
+        pl = prep["pipeline"]
+        out["pipeline"] = dict(pl)
+        emit("recon_speed", "pod_walk", "wall_s",
+             f"{time.time() - t0:.1f}")
+        emit("recon_speed", "pod_walk", "efficiency",
+             "n/a" if pl["efficiency"] is None
+             else f"{pl['efficiency']:.3f}")
+        eff = 1.0 if pl["efficiency"] is None else pl["efficiency"]
+        ok_all &= _gate(out, "pipeline_efficiency", threshold=0.7,
+                        measured=eff, ok=eff >= 0.7, cmp=">=")
 
     ok_sync = results["device"]["syncs_per_iter"] <= 1.0
     out["checks"]["device_host_syncs"] = {

@@ -90,7 +90,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.capture import stage_calibration
 from repro.launch.mesh import (batch_spec, dp_axes, dp_size, make_data_mesh,
-                               shard_map_compat)
+                               shard_map_compat, tp_axis, tp_size)
 
 # ---------------------------------------------------------------------------
 # host-sync accounting
@@ -188,6 +188,11 @@ class SignSGD:
     def init(self, params):
         return jnp.zeros((), jnp.int32)
 
+    def state_specs(self, param_specs):
+        """State is a replicated scalar step counter whatever the params'
+        placement (same protocol as ``AdamW.state_specs``)."""
+        return P()
+
     def update(self, grads, state, params):
         frac = state.astype(jnp.float32) / max(self.total_steps, 1)
         cur_lr = self.lr * (1.0 - frac)
@@ -216,6 +221,54 @@ def _dp_rank(mesh, dp):
     for a in dp:
         r = r * mesh.shape[a] + jax.lax.axis_index(a)
     return r
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel gather/scatter (ParamSpec-driven)
+# ---------------------------------------------------------------------------
+
+def _tp_dim(spec, axis_name):
+    """Index of the dim a PartitionSpec shards over ``axis_name`` (None when
+    the leaf is not TP-sharded — replicated fallback or a non-split leaf)."""
+    if spec is None:
+        return None
+    for d, entry in enumerate(spec):
+        if entry == axis_name or (isinstance(entry, tuple)
+                                  and axis_name in entry):
+            return d
+    return None
+
+
+def _tp_gather(tree, specs, axis_name):
+    """Reassemble full per-block arrays from their TP shards inside a
+    shard_map body: one tiled ``all_gather`` along each leaf's ParamSpec
+    split dim (ZeRO-3 semantics — persistent storage stays 1/TP per device,
+    the full array exists only transiently inside the step).  Leaves whose
+    spec carries no TP axis pass through untouched, so replicated-fallback
+    leaves cost nothing."""
+    def g(x, spec):
+        d = _tp_dim(spec, axis_name)
+        if d is None:
+            return x
+        return jax.lax.all_gather(x, axis_name, axis=d, tiled=True)
+    return jax.tree_util.tree_map(g, tree, specs)
+
+
+def _tp_shard(tree, specs, axis_name, size):
+    """Inverse of ``_tp_gather`` for the *gradients*: every device computed
+    the identical full-size gradient (the calibration batch is replicated
+    over the TP axis), so each keeps the contiguous slice of its own shard —
+    a static-width ``dynamic_slice``, no collective, and elementwise
+    optimizer updates on the slice are bit-identical to slicing after a
+    full-array update (the TP=1 / device-engine equivalence)."""
+    def s(x, spec):
+        d = _tp_dim(spec, axis_name)
+        if d is None:
+            return x
+        w = x.shape[d] // size
+        r = jax.lax.axis_index(axis_name)
+        return jax.lax.dynamic_slice_in_dim(x, r * w, w, axis=d)
+    return jax.tree_util.tree_map(s, tree, specs)
 
 
 # ---------------------------------------------------------------------------
@@ -427,12 +480,25 @@ class ReconstructionEngine:
     """
 
     def __init__(self, loss_fn: Callable, optimizer, *, donate: bool = True,
-                 mesh=None):
+                 mesh=None, param_specs=None):
         self.opt = optimizer
         self.mesh = mesh
         self.dp_degree = D = 1 if mesh is None else dp_size(mesh)
         per_sample = make_per_sample_grad(loss_fn)
         opt = optimizer
+
+        # tensor-parallel placement (ParamSpec contract): ``param_specs`` is
+        # {"tr": <spec tree matching trainables>, "frozen": <spec tree
+        # matching the frozen side state>} of PartitionSpecs whose TP-axis
+        # entry names each leaf's split dim.  Only meaningful with a mesh
+        # that has a model axis; TP degree 1 keeps the specs (and the
+        # gather/scatter no-ops they induce) so the code path is identical.
+        tp_name = tp_axis(mesh) if (mesh is not None
+                                    and param_specs is not None) else None
+        tp_n = tp_size(mesh) if tp_name is not None else 1
+        self.tp_degree = tp_n if tp_name is not None else 1
+        tr_specs = param_specs["tr"] if tp_name is not None else None
+        frozen_specs = param_specs["frozen"] if tp_name is not None else None
 
         if mesh is None:
             def grad_fn(tr, frozen, xb, yb, auxb, chunks):
@@ -480,6 +546,11 @@ class ReconstructionEngine:
             # static under jit: inside shard_map X is the LOCAL pool shard,
             # so the global pool size is its length times the DP degree
             chunks = grad_chunk_count(idx.shape[1], X.shape[0] * D)
+            if tp_name is not None:
+                # frozen side state (block weights, hardened masks, bases)
+                # is read-only across the scan: gather its TP shards once —
+                # XLA hoists the loop-invariant gathers out of the scan
+                frozen = _tp_gather(frozen, frozen_specs, tp_name)
 
             def step(carry, i):
                 tr, opt_state = carry
@@ -487,7 +558,19 @@ class ReconstructionEngine:
                 xb = jnp.take(X, li, axis=0)
                 yb = jnp.take(Y, li, axis=0)
                 auxb = jnp.take(aux, li, axis=0) if aux is not None else None
-                lv, grads = grad_fn(tr, frozen, xb, yb, auxb, chunks)
+                # TP: the loss sees the full rounding/DST variables
+                # (transient per-step gather); the carry — and the Adam
+                # state the update touches — stays a 1/TP shard.  The batch
+                # is replicated over the TP axis, so grads come out
+                # full-size and identical on every TP peer; each keeps its
+                # own slice, which makes the per-element trajectory — and
+                # therefore the hardened mask — independent of the TP
+                # degree.
+                tr_f = (tr if tp_name is None
+                        else _tp_gather(tr, tr_specs, tp_name))
+                lv, grads = grad_fn(tr_f, frozen, xb, yb, auxb, chunks)
+                if tp_name is not None:
+                    grads = _tp_shard(grads, tr_specs, tp_name, tp_n)
                 tr, opt_state = opt.update(grads, opt_state, tr)
                 return (tr, opt_state), lv
             (tr, opt_state), losses = jax.lax.scan(step, (tr, opt_state),
@@ -495,18 +578,30 @@ class ReconstructionEngine:
             return tr, opt_state, losses[-1]
 
         if mesh is not None:
-            # trainables / optimizer state / frozen side state / index plan
-            # replicated; the calibration streams X / Y / aux are SHARDED
-            # over the DP axes on their batch dim — each device stages and
-            # reads only its 1/D of the pool.  Replication checking is off
-            # (in shard_map_compat) because axis_index makes intermediate
-            # values device-varying even though the gather restores
-            # replication before the update.
+            # index plan replicated; the calibration streams X / Y / aux are
+            # SHARDED over the DP axes on their batch dim — each device
+            # stages and reads only its 1/D of the pool.  Trainables /
+            # optimizer state / frozen side state are replicated (P())
+            # without a ParamSpec, or sharded over the TP axis per its
+            # placement contract (out-channel for q/k/v/up, in-channel for
+            # o/down) when one is given — they enter AND leave sharded, so
+            # between PAR iterations the persistent rounding/Adam state
+            # occupies 1/TP per device.  Replication checking is off (in
+            # shard_map_compat) because axis_index makes intermediate values
+            # device-varying even though the gather restores replication
+            # before the update.
             bspec = batch_spec(mesh)
+            if tp_name is None:
+                tr_in, opt_in, frz_in = P(), P(), P()
+            else:
+                tr_in = tr_specs
+                frz_in = frozen_specs
+                opt_in = (opt.state_specs(tr_specs)
+                          if hasattr(opt, "state_specs") else P())
             run = shard_map_compat(
                 run, mesh=mesh,
-                in_specs=(P(), P(), P(), bspec, bspec, bspec, P()),
-                out_specs=(P(), P(), P()))
+                in_specs=(tr_in, opt_in, frz_in, bspec, bspec, bspec, P()),
+                out_specs=(tr_in, opt_in, P()))
 
         # trainables + optimizer state are loop carries: donate them so the
         # update happens in place where the backend supports aliasing —

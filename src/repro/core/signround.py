@@ -88,13 +88,16 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
     frozen = {"bp": bp, "fixed": fixed}
     if engine in ("device", "sharded"):
         m = RE.resolve_mesh(mesh) if engine == "sharded" else None
-        eng = cache.get(engine) if cache is not None else None
+        # key by mesh too: the pod-pipelined walk hands each block its own
+        # per-pod submesh, and an engine jitted for one cannot serve another
+        key = engine if m is None else (engine, m)
+        eng = cache.get(key) if cache is not None else None
         if eng is None:
             eng = RE.ReconstructionEngine(
                 loss_fn, RE.SignSGD(lr=lr, total_steps=steps, clip=0.5),
                 mesh=m)
             if cache is not None:
-                cache[engine] = eng
+                cache[key] = eng
         plan = RE.stage_plan(X, Y, aux, batch_size=batch_size,
                              total_steps=steps, seed=seed, mesh=m)
         st = eng.init(vs)

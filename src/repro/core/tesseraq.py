@@ -382,20 +382,43 @@ def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
     Block params travel inside the engine's ``frozen`` argument, so with a
     per-stage ``cache`` the scanned step compiles ONCE and is reused for
     every identically-shaped block.  With ``mesh`` the scanned step is the
-    shard_map data-parallel variant (engine="sharded")."""
+    shard_map variant (engine="sharded"): data-parallel over the mesh's DP
+    axes, and — when the mesh has a ``model`` axis — with the rounding/DST
+    variables, frozen side state, block weights and Adam moments sharded
+    over it per the ``launch.sharding.ParamSpec`` placement contract."""
     K = tcfg.par_iterations if tcfg.par else 1
     T = tcfg.steps_per_iteration
-    key = "device" if mesh is None else "sharded"
+    trainable_keys = ("nu", "v") if tcfg.dst else ("nu",)
+    # cache per mesh object, not per engine kind: the pipelined cross-pod
+    # walk hands alternating pod submeshes to the same stage cache, and a
+    # shard_map traced for one mesh cannot serve another
+    key = "device" if mesh is None else ("sharded", mesh)
     eng = cache.get(key) if cache is not None else None
     if eng is None:
+        # lazy import: sharding.py pulls core.qtensor through the package
+        # root, so a module-level import here would be circular whenever
+        # launch.sharding is imported first
+        from repro.launch.sharding import ParamSpec
+        param_specs = None
+        pspec = ParamSpec.for_mesh(mesh)
+        if mesh is not None and pspec.active:
+            frozen_sts = {p: {k: v for k, v in st.items()
+                              if k not in trainable_keys}
+                          for p, st in states.items()}
+            param_specs = {
+                "tr": {p: {k: pspec.state_spec(p[-1], k, states[p][k].shape)
+                           for k in trainable_keys}
+                       for p in states},
+                "frozen": {"bp": pspec.block_specs(bp),
+                           "sts": pspec.state_specs(frozen_sts)},
+            }
         eng = RE.ReconstructionEngine(_make_loss_fn(apply, qcfg, tcfg),
-                                      AdamW(lr=tcfg.lr), mesh=mesh)
+                                      AdamW(lr=tcfg.lr), mesh=mesh,
+                                      param_specs=param_specs)
         if cache is not None:
             cache[key] = eng
     plan = RE.stage_plan(X, Y, aux, batch_size=tcfg.batch_size,
                          total_steps=K * T, seed=tcfg.seed, mesh=mesh)
-
-    trainable_keys = ("nu", "v") if tcfg.dst else ("nu",)
 
     sr = list(tcfg.soft_rate)
     opt_state = None

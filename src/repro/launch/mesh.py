@@ -7,6 +7,7 @@ never touches jax device state — required because the dry-run forces a
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
@@ -72,7 +73,97 @@ def dp_size(mesh, axes=None) -> int:
 
 
 def tp_axis(mesh):
+    """Name of the tensor-parallel mesh axis, or None when the mesh has no
+    ``model`` axis.  NOTE: this reports the axis *name* even at extent 1 —
+    callers that branch on "is TP actually on?" should use :func:`tp_size`
+    instead of special-casing degree-1 TP."""
     return "model" if "model" in mesh.axis_names else None
+
+
+def tp_size(mesh) -> int:
+    """Tensor-parallel degree (extent of the ``model`` axis; 1 when the mesh
+    has no such axis or is None — 0/1-safe, mirroring ``dp_size``)."""
+    if mesh is None:
+        return 1
+    ax = tp_axis(mesh)
+    return int(mesh.shape[ax]) if ax is not None else 1
+
+
+def pod_axis(mesh):
+    """Name of the cross-pod (pipeline) mesh axis, or None."""
+    return "pod" if mesh is not None and "pod" in mesh.axis_names else None
+
+
+def pod_count(mesh) -> int:
+    """Number of pods (extent of the ``pod`` axis; 1 when absent)."""
+    ax = pod_axis(mesh)
+    return int(mesh.shape[ax]) if ax is not None else 1
+
+
+_POD_SUBMESH_CACHE: dict = {}
+
+
+def pod_submeshes(mesh) -> list:
+    """One ``("data", "model")``-shaped submesh per pod, carved out of a
+    ``("pod", "data", "model")`` mesh's device grid.
+
+    The pipelined block walk places block k's reconstruction on submesh
+    ``k % n_pods`` and block k+1's capture forward on the next one, so the
+    two phases run on disjoint device sets and genuinely overlap.  Memoized
+    per device grid (same reason as ``make_data_mesh``: distinct-but-equal
+    Mesh objects defeat jit's tracing cache on jax 0.4.x, and the walk
+    resolves the same pod's submesh once per block)."""
+    ax = pod_axis(mesh)
+    if ax is None:
+        return [mesh]
+    rest = tuple(a for a in mesh.axis_names if a != ax)
+    key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+    if key not in _POD_SUBMESH_CACHE:
+        pod_dim = mesh.axis_names.index(ax)
+        devs = np.moveaxis(mesh.devices, pod_dim, 0)
+        _POD_SUBMESH_CACHE[key] = [
+            jax.sharding.Mesh(devs[p], rest) for p in range(devs.shape[0])]
+    return _POD_SUBMESH_CACHE[key]
+
+
+def reshard_between_pods(x, dst_mesh, spec=None):
+    """Move an array (or pytree) onto another pod's submesh — the explicit
+    cross-mesh transfer seam of the pipelined block walk (the analog of
+    alpa's pipeshard ``send_recv`` resharding: device-to-device transfers
+    between disjoint device sets, here expressed as a ``device_put`` onto
+    the destination mesh so XLA's transfer engine picks the route).
+
+    ``spec`` defaults to ``batch_spec(dst_mesh)`` — activation streams move
+    batch-sharded over the destination's DP axes.  Pass ``P()`` (or a
+    per-leaf spec pytree) for replicated/parameter payloads."""
+    from jax.sharding import NamedSharding
+
+    dspec = batch_spec(dst_mesh) if spec is None else spec
+
+    def put(leaf, s):
+        if leaf is None:
+            return None
+        target = s
+        if not isinstance(target, jax.sharding.Sharding):
+            target = NamedSharding(dst_mesh, target)
+        return jax.device_put(leaf, target)
+
+    if isinstance(dspec, (P, jax.sharding.Sharding)):
+        return jax.tree_util.tree_map(lambda leaf: put(leaf, dspec), x)
+    return jax.tree_util.tree_map(put, x, dspec)
+
+
+def validate_single_pod(mesh, what: str) -> None:
+    """Serving paths are single-mesh: they have no cross-pod resharding
+    seam, so a multi-pod mesh would silently mis-shard (the ``pod`` axis
+    would be treated as one more data axis).  Fail loudly instead."""
+    if mesh is not None and pod_count(mesh) > 1:
+        raise ValueError(
+            f"{what} runs on a single-pod mesh, but was handed a multi-pod "
+            f"mesh with axes {mesh.axis_names} (pod extent "
+            f"{pod_count(mesh)}); quantization's pipelined block walk is "
+            "the only multi-pod consumer — serve each pod with its own "
+            "submesh (launch.mesh.pod_submeshes) instead")
 
 
 def batch_spec(mesh) -> P:

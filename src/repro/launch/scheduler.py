@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import validate_single_pod
 from repro.launch.steps import (cache_donate_argnums, make_paged_install_step,
                                 make_sched_steps)
 from repro.models.common import (DenseCacheStore, PagedCacheStore, write_slot)
@@ -221,13 +222,19 @@ def _prefill_len(cfg: ModelConfig, req: Request) -> int:
 def compile_sched_steps(cfg: ModelConfig, *, max_seq: int,
                         kernel_backend=None, act_bits=None,
                         page_size: int = 0,
-                        decode_attn_chunk: int = 1 << 30) -> SchedSteps:
+                        decode_attn_chunk: int = 1 << 30,
+                        mesh=None) -> SchedSteps:
     """Jit-wrap the scheduler's step set ONCE per serving configuration.
     Reuse the result across runs/repeats — rebuilding retraces.
     ``page_size > 0`` builds the paged-store step set (page-table-aware
-    decode plus the paged admission install step)."""
+    decode plus the paged admission install step).
+
+    ``mesh`` must be single-pod: the scheduler has no cross-pod path (the
+    pipelined quantization walk is the only multi-pod consumer) — give
+    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead."""
+    validate_single_pod(mesh, "compile_sched_steps")
     model, pstep, dstep = make_sched_steps(
-        cfg, None, max_seq=max_seq, act_bits=act_bits,
+        cfg, mesh, max_seq=max_seq, act_bits=act_bits,
         kernel_backend=kernel_backend, page_size=page_size,
         decode_attn_chunk=decode_attn_chunk)
     install = None

@@ -38,6 +38,7 @@ from repro.core import pack_model, quantize_model, quantized_memory_report
 from repro.core.qtensor import PACK_FACTOR
 from repro.core.tesseraq import TesseraQConfig
 from repro.data.pipeline import DataConfig, SyntheticCorpus, calibration_batches
+from repro.launch.mesh import validate_single_pod
 from repro.launch.steps import cache_donate_argnums, make_serve_steps
 from repro.models import get_model
 
@@ -92,13 +93,19 @@ def build_params(cfg, params, qcfg: QuantConfig, data_cfg: DataConfig, *,
     return packed, report
 
 
-def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None):
+def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None,
+                        mesh=None):
     """Jit-wrap the prefill/decode steps ONCE for a (backend, act_bits)
     serving configuration.  Benchmarks must reuse the returned pair across
     timed repeats — re-wrapping per call would retrace and recompile, and
-    the timings would measure XLA, not serving."""
+    the timings would measure XLA, not serving.
+
+    ``mesh`` must be single-pod: serving has no cross-pod path (the
+    pipelined quantization walk is the only multi-pod consumer) — give
+    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead."""
+    validate_single_pod(mesh, "compile_serve_steps")
     _, prefill_step, decode_step = make_serve_steps(
-        cfg, None, act_bits=act_bits, kernel_backend=kernel_backend)
+        cfg, mesh, act_bits=act_bits, kernel_backend=kernel_backend)
     return (jax.jit(prefill_step),
             jax.jit(decode_step, donate_argnums=cache_donate_argnums(1)))
 

@@ -8,13 +8,15 @@ runs on 8-chip test meshes and 512-chip production meshes unmodified
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.qtensor import QTensor
-from repro.launch.mesh import dp_axes
+from repro.launch.mesh import dp_axes, tp_axis, tp_size
 
 # logical name -> tuple of mesh axes (joined when multiple)
 def logical_table(mesh, overrides=None):
@@ -149,6 +151,140 @@ def param_shardings(mesh, params, cfg: ModelConfig, overrides=None):
         return NamedSharding(mesh, resolve_spec(mesh, logical, node.shape,
                                                 overrides))
     return walk(params, ())
+
+
+# --------------------------------------------------------------------------
+# ParamSpec: the reconstruction stack's tensor-parallel placement contract
+# --------------------------------------------------------------------------
+
+# TesseraQ per-linear reconstruction state layouts (tesseraq._leaf_state):
+# rounding variables and their frozen companions live in the GROUPED weight
+# layout, the DST/scale family in the per-group layout.
+RECON_GROUPED_KEYS = ("nu", "hard", "base")     # (..., ng, g, out)
+RECON_GROUPVEC_KEYS = ("v", "scale", "zero")    # (..., ng, out)
+
+
+def recon_split(name: str) -> Optional[str]:
+    """Which weight channel a reconstruction leaf splits over the TP axis:
+    ``"out"`` for output-channel-sharded linears (q/k/v/gate/up — their
+    ``PARAM_RULES`` orientation puts ``tensor`` on the out dim), ``"in"``
+    for input-channel-sharded ones (o/down), None for everything else."""
+    rule = PARAM_RULES.get(name)
+    if not rule or len(rule) < 2:
+        return None
+    if rule[-1] == "tensor":
+        return "out"
+    if rule[0] == "tensor":
+        return "in"
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Tensor-parallel placement contract for block reconstruction.
+
+    One object per mesh answers, for every per-block array the
+    reconstruction stack carries — the weight itself, the rounding/DST
+    variables (``nu``/``v``), their frozen companions (``hard``/``base``/
+    ``scale``/``zero``/``act_scale``) and, structurally, the Adam moments —
+    *which dim, if any, is sharded over* ``tp_axis(mesh)``:
+
+      * out-split leaves (wq/wk/wv/w_gate/w_up, …): the ``out`` dim — last
+        dim of the weight, of the grouped ``nu`` layout, and of the
+        per-group ``scale``/``v`` layout.
+      * in-split leaves (wo/w_down, …): the ``in`` dim — dim -2 of the
+        weight, the group-count dim (-3) of ``nu``, dim -2 of ``scale``,
+        and the only dim of ``act_scale`` (quant groups tile the in dim
+        contiguously, so the three gathers concatenate consistently).
+
+    Any dim that does not divide by the TP degree falls back to
+    replication per leaf (``P()``), the same elastic-scaling contract as
+    ``resolve_spec`` — the engine's gather/scatter treats a spec with no TP
+    axis as a no-op, so mixed sharded/replicated blocks stay correct.
+    ``pipeline.quantize_model`` (capture-forward weight placement),
+    ``capture`` (stream placement next to them) and
+    ``recon_engine.ReconstructionEngine`` (shard_map in/out specs +
+    per-step gather/scatter dims) all consume the same object, so the
+    placement never has to be re-derived — and at TP degree 1 every spec
+    degenerates to the replicated layout, which is what keeps
+    ``engine="sharded"`` bit-identical to ``engine="device"`` there."""
+
+    mesh: Any
+    axis: Optional[str]
+    size: int
+
+    @classmethod
+    def for_mesh(cls, mesh) -> "ParamSpec":
+        return cls(mesh, tp_axis(mesh) if mesh is not None else None,
+                   tp_size(mesh))
+
+    @property
+    def active(self) -> bool:
+        return self.axis is not None
+
+    def _split_at(self, ndim: int, dim: int, extent: int) -> P:
+        if (self.axis is None or ndim + dim < 0
+                or extent % max(self.size, 1)):
+            return P()
+        spec = [None] * ndim
+        spec[dim] = self.axis
+        return P(*spec)
+
+    def weight_spec(self, name: str, shape) -> P:
+        """Spec for a quantizable weight leaf ``(..., in, out)``."""
+        split = recon_split(name)
+        if split == "out":
+            return self._split_at(len(shape), -1, shape[-1])
+        if split == "in" and len(shape) >= 2:
+            return self._split_at(len(shape), -2, shape[-2])
+        return P()
+
+    def state_spec(self, name: str, key: str, shape) -> P:
+        """Spec for one reconstruction-state array of leaf ``name``."""
+        split = recon_split(name)
+        if split is None:
+            return P()
+        ndim = len(shape)
+        if key in RECON_GROUPED_KEYS and ndim >= 3:
+            dim = -1 if split == "out" else -3
+        elif key in RECON_GROUPVEC_KEYS and ndim >= 2:
+            dim = -1 if split == "out" else -2
+        elif key == "act_scale" and ndim >= 1 and split == "in":
+            dim = -1
+        else:
+            return P()
+        return self._split_at(ndim, dim, shape[dim])
+
+    def block_specs(self, bp):
+        """Spec pytree matching a raw block-param tree (non-quantizable
+        leaves — norms, routers — replicated)."""
+        def walk(node, path):
+            if isinstance(node, dict):
+                return {k: walk(v, path + (k,)) for k, v in node.items()}
+            if node is None or not hasattr(node, "shape"):
+                return P()
+            return self.weight_spec(path[-1], node.shape)
+        return walk(bp, ())
+
+    def state_specs(self, states):
+        """Spec pytree matching a ``{path: {key: array}}`` reconstruction
+        state tree (``None`` leaves — absent act_scale — mirrored)."""
+        return {
+            p: {k: (None if v is None
+                    else self.state_spec(p[-1], k, v.shape))
+                for k, v in st.items()}
+            for p, st in states.items()}
+
+    def place_block(self, bp):
+        """Device_put a block-param tree per its ``block_specs`` — the
+        capture-forward placement ``quantize_model`` applies so the FP
+        target forwards partition over the TP axis too."""
+        if not self.active:
+            return bp
+        specs = self.block_specs(bp)
+        return jax.tree_util.tree_map(
+            lambda leaf, s: jax.device_put(
+                leaf, NamedSharding(self.mesh, s)), bp, specs)
 
 
 # --------------------------------------------------------------------------

@@ -119,10 +119,15 @@ def make_ctx(cfg, qcfg=None, *, mesh=None, decode: bool = False,
                          f"multiple of page_size ({page_size})")
     if mesh is not None:
         # lazy import: common.py sits below launch/ in the layering
-        from repro.launch.mesh import dp_axes, tp_axis
+        from repro.launch.mesh import dp_axes, tp_axis, tp_size
         from repro.launch.sharding import make_sharder
+        # EP rides the model axis only when it has real extent — a
+        # degenerate ("data",)-style mesh must not hand the moe kernels a
+        # dead axis name
         kw.setdefault("ep_axis",
-                      tp_axis(mesh) if cfg.family == "moe" else None)
+                      tp_axis(mesh)
+                      if cfg.family == "moe" and tp_size(mesh) > 1
+                      else None)
         kw.update(shard=make_sharder(mesh, shard_overrides), mesh=mesh,
                   dp_axes=dp_axes(mesh))
     return Ctx(decode=decode, **kw)

@@ -42,6 +42,15 @@ class AdamW:
         """ShapeDtypeStruct skeleton of ``init`` (AOT donation planning)."""
         return jax.eval_shape(self.init, params)
 
+    def state_specs(self, param_specs) -> AdamState:
+        """PartitionSpec pytree for the state, given one for the params: the
+        moments mirror the params' placement exactly (the update is
+        elementwise), the step counter is replicated.  This is what lets the
+        TP-sharded reconstruction engine keep the Adam state sharded over
+        the model axis alongside the rounding variables."""
+        from jax.sharding import PartitionSpec as P
+        return AdamState(P(), param_specs, param_specs)
+
     def jitted_update(self, donate: bool = True):
         """``update`` compiled standalone.  With ``donate=True`` the grads,
         optimizer state and params buffers are donated — the optimizer

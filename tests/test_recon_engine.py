@@ -340,6 +340,57 @@ def test_sharded_engine_1device_mesh_bit_for_bit():
                        what="sharded(1-dev mesh) vs device")
 
 
+def test_tp_sharded_engine_tp1_bit_for_bit():
+    """A (1, 1) ("data", "model") mesh activates the ENTIRE ParamSpec
+    tensor-parallel path — sharded rounding variables and Adam state,
+    per-step gather, per-shard gradient slice — at degree 1, which must
+    change nothing: TP=1 is bit-identical to the device engine.  Runs in
+    the plain tier-1 suite on a single device."""
+    mesh = make_mesh((1, 1))
+    metas = _run_both({"device": None, "sharded": mesh}, {}, bs=4)
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="sharded(TP=1 mesh) vs device")
+
+
+def _tp_mesh():
+    """A ("data", "model") mesh with real TP extent — (2, 4) on the CI
+    8-device host platform."""
+    n = len(jax.devices())
+    if n < 4 or n % 2 or n > 16:
+        pytest.skip("needs an even 4..16 device count; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    tp = 4 if n % 8 == 0 else 2
+    return make_mesh((n // tp, tp))
+
+
+@pytest.mark.parametrize("kwargs", [
+    {},
+    {"dst": False},
+    {"carry_opt_state": False},
+], ids=["default", "no_dst", "no_carry"])
+def test_tp_sharded_engine_bit_for_bit_multidevice(kwargs):
+    """The TP acceptance contract: with weights, rounding/DST variables and
+    Adam state sharded over the model axis per ParamSpec, the engine on a
+    (data=2, model=4) mesh reproduces the device engine's hardened masks,
+    packed codes AND folded scales bit-for-bit — every TP peer sees the
+    identical full gradient (the calibration batch is replicated over the
+    model axis), and slicing before the elementwise Adam update commutes
+    with updating then slicing."""
+    mesh = _tp_mesh()
+    metas = _run_both({"device": None, "sharded": mesh}, kwargs,
+                      bs=2 * dp_size(mesh))
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what=f"TP-sharded {dict(mesh.shape)} vs device")
+
+
+def test_tp_sharded_engine_bit_for_bit_multidevice_with_aux():
+    mesh = _tp_mesh()
+    metas = _run_both({"device": None, "sharded": mesh}, {}, seed=2,
+                      aux_seed=7, bs=2 * dp_size(mesh))
+    _assert_meta_equal(metas["device"], metas["sharded"],
+                       what="TP-sharded vs device (aux)")
+
+
 def test_sharded_engine_default_mesh_resolution():
     """engine="sharded" with mesh=None resolves to a data mesh over all
     visible devices (whatever their count) and still matches device."""
@@ -528,7 +579,7 @@ def test_sharded_engine_host_syncs():
     assert RE.sync_count() == K
 
 
-def _tiny_walk(engine, *, num_layers=2, batch_size=8, K=2, T=4):
+def _tiny_walk(engine, *, num_layers=2, batch_size=8, K=2, T=4, mesh=None):
     from repro.configs import get_reduced_config
     from repro.core.pipeline import quantize_model
     from repro.models import get_model
@@ -539,7 +590,7 @@ def _tiny_walk(engine, *, num_layers=2, batch_size=8, K=2, T=4):
     batches = [{"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (8, 12)))}]
     tcfg = TQ.TesseraQConfig(par_iterations=K, steps_per_iteration=T,
-                             batch_size=batch_size, engine=engine)
+                             batch_size=batch_size, engine=engine, mesh=mesh)
     return quantize_model(cfg, params, batches,
                           QuantConfig(bits=2, group_size=32),
                           method="tesseraq", init="rtn", tcfg=tcfg)
@@ -561,6 +612,42 @@ def test_quantize_model_sharded_end_to_end():
             np.asarray(metas["device"][k]["codes"]),
             np.asarray(metas["sharded"][k]["codes"]),
             err_msg=f"walk: codes diverged at {k}")
+
+
+def test_quantize_model_pod_pipelined_walk():
+    """The multi-pod walk on a ("pod","data","model") mesh: blocks
+    round-robin over the per-pod submeshes, the cross-pod prefetch feeds
+    block k+1's reconstruction from block k's targets, and the report
+    carries per-stage pipeline profiling.  Walk-level numerics are
+    tolerance-checked, not bit-checked: placing the capture forwards
+    TP-sharded makes GSPMD psum the in-split contractions, which perturbs
+    the Y targets at the ulp level (the engine-level TP tests above pin
+    bit-exactness on identical staged inputs)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices; run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    mesh = make_mesh((2, 2, 2))
+    _, qm_s, rep_s = _tiny_walk("sharded", num_layers=3, mesh=mesh)
+    _, qm_d, rep_d = _tiny_walk("device", num_layers=3)
+
+    pl = rep_s["pipeline"]
+    assert pl["pods"] == 2 and pl["dp"] == 2 and pl["tp"] == 2
+    assert [b["pod"] for b in pl["blocks"]] == [0, 1, 0]
+    # blocks 1..2 were prefetched cross-pod: their residual capture wait
+    # was measured, and the steady-state efficiency summarizes it
+    assert [b["capture_wait_secs"] is None for b in pl["blocks"]] == \
+        [True, False, False]
+    assert pl["blocks"][0]["fill_secs"] > 0       # pipeline fill: block 0
+    assert 0.0 < pl["efficiency"] <= 1.0
+
+    # same artifact surface, closely tracking numerics
+    assert set(qm_s) == set(qm_d)
+    for k in qm_d:
+        assert np.asarray(qm_s[k]["codes"]).shape == \
+            np.asarray(qm_d[k]["codes"]).shape
+    mse_s = [b["recon_mse"] for b in rep_s["blocks"]]
+    mse_d = [b["recon_mse"] for b in rep_d["blocks"]]
+    np.testing.assert_allclose(mse_s, mse_d, rtol=0.15)
 
 
 def test_quantize_model_sharded_lifts_default_batch():

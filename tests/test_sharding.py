@@ -106,18 +106,205 @@ def test_production_mesh_shapes(monkeypatch):
                      ((2, 16, 16), ("pod", "data", "model"))]
 
 
+class FakeProductionMesh:
+    """Stand-in with the 2-pod 512-chip topology's names/extents — the
+    helpers under test only read ``axis_names`` + ``shape``."""
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
 def test_dp_helpers_on_multi_pod_mesh():
     """dp_axes/dp_size/tp_axis only read axis_names + shape, so the 2-pod
     512-chip topology is testable with a stand-in."""
     from repro.launch.mesh import dp_axes, dp_size, tp_axis
 
-    class FakeMesh:
-        axis_names = ("pod", "data", "model")
-        shape = {"pod": 2, "data": 16, "model": 16}
+    assert dp_axes(FakeProductionMesh) == ("pod", "data")
+    assert dp_size(FakeProductionMesh) == 32
+    assert tp_axis(FakeProductionMesh) == "model"
 
-    assert dp_axes(FakeMesh) == ("pod", "data")
-    assert dp_size(FakeMesh) == 32
-    assert tp_axis(FakeMesh) == "model"
+
+def test_tp_and_pod_helpers():
+    """tp_size / pod_axis / pod_count across mesh shapes, including the
+    0/1-safe degenerate cases mirroring dp_size's contract."""
+    from repro.launch.mesh import (make_data_mesh, make_mesh, pod_axis,
+                                   pod_count, tp_size)
+    assert tp_size(None) == 1 and pod_count(None) == 1
+    assert pod_axis(None) is None
+
+    m1 = make_data_mesh(1)
+    assert tp_size(m1) == 1 and pod_axis(m1) is None and pod_count(m1) == 1
+
+    m2 = make_mesh((1, 1))
+    assert tp_size(m2) == 1 and pod_axis(m2) is None
+
+    m3 = make_mesh((1, 1, 1))
+    assert pod_axis(m3) == "pod" and pod_count(m3) == 1
+    assert tp_size(m3) == 1
+
+    assert tp_size(FakeProductionMesh) == 16
+    assert pod_count(FakeProductionMesh) == 2
+
+
+def test_pod_submeshes_and_memoization():
+    """Per-pod submeshes drop the pod axis, keep the rest, and are memoized
+    (distinct-but-equal Mesh objects would defeat the jit cache, so every
+    resolution of the same pod must hand back the SAME objects)."""
+    from repro.launch.mesh import make_data_mesh, make_mesh, pod_submeshes
+    m3 = make_mesh((1, 1, 1))
+    pods = pod_submeshes(m3)
+    assert len(pods) == 1
+    assert pods[0].axis_names == ("data", "model")
+    assert pods[0].shape == {"data": 1, "model": 1}
+    assert pod_submeshes(m3)[0] is pods[0]
+    # a mesh without a pod axis is its own (only) submesh
+    m1 = make_data_mesh(1)
+    assert pod_submeshes(m1) == [m1]
+
+
+def test_reshard_between_pods_pytrees():
+    """The cross-pod seam: pytrees land on the destination mesh under its
+    batch spec by default, None leaves pass through, explicit specs are
+    honored."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import (batch_spec, make_mesh,
+                                   pod_submeshes, reshard_between_pods)
+    dst = pod_submeshes(make_mesh((1, 1, 1)))[0]
+    x = {"a": np.arange(8, dtype=np.float32).reshape(4, 2), "b": None}
+    out = reshard_between_pods(x, dst)
+    assert out["b"] is None
+    np.testing.assert_array_equal(np.asarray(out["a"]), x["a"])
+    assert out["a"].sharding == NamedSharding(dst, batch_spec(dst))
+    # explicit replicated spec
+    out2 = reshard_between_pods(x["a"], dst, spec=P())
+    assert out2.sharding == NamedSharding(dst, P())
+
+
+def test_validate_single_pod():
+    from repro.launch.mesh import make_mesh, validate_single_pod
+    validate_single_pod(None, "x")                       # no mesh: fine
+    validate_single_pod(make_mesh((1, 1)), "x")          # no pod axis: fine
+    validate_single_pod(make_mesh((1, 1, 1)), "x")       # pod extent 1: fine
+    with pytest.raises(ValueError) as ei:
+        validate_single_pod(FakeProductionMesh, "the scheduler")
+    msg = str(ei.value)
+    # the message must name the offending axes and point at the remedy
+    assert "the scheduler" in msg
+    assert "('pod', 'data', 'model')" in msg
+    assert "pod_submeshes" in msg
+
+
+def test_serving_entry_points_reject_multi_pod_mesh():
+    """compile_sched_steps / compile_serve_steps fail fast (before any
+    tracing) when handed a multi-pod mesh — serving has no cross-pod path;
+    each pod gets its own submesh."""
+    from repro.configs import get_reduced_config
+    from repro.launch.scheduler import compile_sched_steps
+    from repro.launch.serve import compile_serve_steps
+    cfg = get_reduced_config("tinyllama-1.1b")
+    with pytest.raises(ValueError, match="compile_sched_steps"):
+        compile_sched_steps(cfg, max_seq=32, mesh=FakeProductionMesh)
+    with pytest.raises(ValueError, match="compile_serve_steps"):
+        compile_serve_steps(cfg, mesh=FakeProductionMesh)
+
+
+def test_param_spec_placements_llama3_405b_smoke():
+    """The ParamSpec TP contract on the llama3-405b-smoke block shapes:
+    out-split leaves (wq/wk/wv/w_gate/w_up) shard the LAST weight dim,
+    in-split leaves (wo/w_down) the SECOND-TO-LAST; rounding state follows
+    (nu grouped (..., ng, g, out), scale groupvec (..., ng, out)); leaves a
+    TP degree does not divide fall back to replicated."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import ParamSpec
+
+    class SmokePodMesh:                       # one pod's ("data","model")
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    ps = ParamSpec.for_mesh(SmokePodMesh)
+    assert ps.active and ps.size == 16
+    d, ff = 64, 192                           # llama3-405b-smoke dims
+    # out-split weight: (in, out) shards out
+    assert ps.weight_spec("wq", (d, d)) == P(None, "model")
+    assert ps.weight_spec("w_up", (d, ff)) == P(None, "model")
+    # in-split weight: (in, out) shards in
+    assert ps.weight_spec("wo", (d, d)) == P("model", None)
+    assert ps.weight_spec("w_down", (ff, d)) == P("model", None)
+    # rounding state: nu (ng, g, out) — out-split shards out, in-split ng
+    assert ps.state_spec("wq", "nu", (2, 32, d)) == P(None, None, "model")
+    # group vectors (ng, out): out-split shards out, in-split ng
+    assert ps.state_spec("wq", "scale", (2, d)) == P(None, "model")
+    # act_scale (in,) shards only for in-split leaves
+    assert ps.state_spec("wo", "act_scale", (d,)) == P("model")
+    assert ps.state_spec("wq", "act_scale", (d,)) == P()
+    # in-split state shards the GROUP-count dim — at these smoke shapes
+    # (ng = 2 or 6) TP=16 does not divide it, so it falls back replicated
+    # rather than wedging the engine ...
+    assert ps.state_spec("w_down", "nu", (ff // 32, 32, d)) == P()
+    assert ps.state_spec("wo", "scale", (2, d)) == P()
+    # ... while a dividing TP degree shards it
+
+    class TP2Mesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+
+    ps2 = ParamSpec.for_mesh(TP2Mesh)
+    assert ps2.state_spec("w_down", "nu", (ff // 32, 32, d)) == \
+        P("model", None, None)
+    assert ps2.state_spec("wo", "scale", (2, d)) == P("model", None)
+    # norms / non-rule leaves are replicated
+    assert ps.weight_spec("norm_scale", (d,)) == P()
+
+
+@pytest.mark.slow
+def test_production_mesh_multi_pod_512_devices():
+    """make_production_mesh(multi_pod=True) under a 512-device forced host
+    platform: axis names/extents, the batch spec spanning (pod, data), the
+    per-pod submesh split, and the ParamSpec TP placements on the
+    llama3-405b-smoke block — the full multi-pod contract, end to end, in
+    a subprocess so the device-count flag cannot leak into other tests."""
+    prog = r"""
+import json
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_reduced_config
+from repro.launch.mesh import (batch_spec, dp_size, make_production_mesh,
+                               pod_count, pod_submeshes, tp_size)
+from repro.launch.sharding import ParamSpec
+
+mesh = make_production_mesh(multi_pod=True)
+assert mesh.axis_names == ("pod", "data", "model")
+assert dict(mesh.shape) == {"pod": 2, "data": 16, "model": 16}
+assert batch_spec(mesh) == P(("pod", "data"))
+assert dp_size(mesh) == 32 and tp_size(mesh) == 16 and pod_count(mesh) == 2
+
+pods = pod_submeshes(mesh)
+assert len(pods) == 2
+seen = set()
+for p in pods:
+    assert p.axis_names == ("data", "model")
+    assert dict(p.shape) == {"data": 16, "model": 16}
+    ids = frozenset(d.id for d in p.devices.flat)
+    assert len(ids) == 256
+    seen |= ids
+assert len(seen) == 512                       # disjoint pods cover the mesh
+
+cfg = get_reduced_config("llama3-405b")
+assert cfg.name == "llama3-405b-smoke"
+ps = ParamSpec.for_mesh(pods[0])
+assert ps.active and ps.size == 16
+d, ff = cfg.d_model, cfg.d_ff
+assert ps.weight_spec("wq", (d, d)) == P(None, "model")
+assert ps.weight_spec("w_down", (ff, d)) == P("model", None)
+assert ps.state_spec("wq", "nu", (2, d // 2, d)) == P(None, None, "model")
+assert ps.state_spec("wo", "act_scale", (d,)) == P("model")
+print(json.dumps({"ok": True}))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=512")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, env=env, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert json.loads(r.stdout.strip().splitlines()[-1]) == {"ok": True}
 
 
 def test_split_minibatches_mesh_resident():
