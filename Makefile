@@ -2,8 +2,9 @@ PY      ?= python
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-slow test-multidevice lint bench-smoke bench \
-	bench-serve bench-serve-smoke bench-paged-smoke eval eval-smoke
+.PHONY: test test-slow test-multidevice lint lint-contracts sanitize-smoke \
+	bench-smoke bench bench-serve bench-serve-smoke bench-paged-smoke \
+	eval eval-smoke
 
 # tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
 test:
@@ -22,6 +23,23 @@ test-multidevice:
 # ruff gate (same as the CI lint job; needs ruff on PATH)
 lint:
 	ruff check .
+
+# repo-contract static analysis: AST rules over src/tests (host-sync,
+# jit-cache, env-read, donation-guard, spec-conformance, pallas-contract,
+# alias-push, pragma grammar) plus the compiled-artifact HLO lint, which
+# lowers the jitted scheduler decode step and the sharded recon step on a
+# forced 8-device host platform and asserts zero host transfers and only
+# the one contracted fused all-gather
+lint-contracts:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m tools.reprolint src tests --hlo
+
+# the runtime half: recompile detector + transfer-guard tests, including the
+# scheduler decode loop and the recon engine end-to-end under
+# sanitized(transfer_guard=True)
+sanitize-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q tests/test_sanitize.py tests/test_reprolint.py
 
 # executes the reconstruction-engine speed benchmark end-to-end with tiny
 # step counts — catches perf-path breakage on every CI run; emits

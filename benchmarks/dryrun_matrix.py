@@ -1,4 +1,5 @@
 import os
+# reprolint: ok[env-read] — intentional WRITE that must run before jax's first import locks the device count
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Run the full dry-run matrix: every (arch x shape) cell on the single-pod

@@ -84,7 +84,8 @@ def row(r, md=False):
                  fmt_s(roof.get("t_total")),
                  fmt_s(_kernel_modeled(r))]
     sep = " | " if md else "  "
-    return sep.join(str(c).ljust(w) for c, w in zip(cells, WIDTHS))
+    return sep.join(str(c).ljust(w)
+                    for c, w in zip(cells, WIDTHS, strict=True))
 
 
 def main(argv=None):
@@ -96,7 +97,7 @@ def main(argv=None):
     hdr = ["arch", "shape", "quant", "bottleneck", "t_comp", "t_mem",
            "t_coll", "peakHBM", "useful", "t_step", "t_mem_krn"]
     sep = " | " if args.md else "  "
-    print(sep.join(h.ljust(w) for h, w in zip(hdr, WIDTHS)))
+    print(sep.join(h.ljust(w) for h, w in zip(hdr, WIDTHS, strict=True)))
     if args.md:
         print(sep.join("-" * w for w in WIDTHS))
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}

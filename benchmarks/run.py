@@ -34,7 +34,7 @@ def check_orderings(results):
     checks = []
 
     def get(table, name):
-        for n, m, v in results.get(table, []):
+        for n, _m, v in results.get(table, []):
             if n == name:
                 return float(v)
         return None

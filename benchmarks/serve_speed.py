@@ -68,7 +68,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, gate as _gate
+from benchmarks.common import (emit, gate as _gate, run_sanitized,
+                               sanitizer_gate)
 from repro.configs import get_reduced_config
 from repro.core import pack_model, quantize_model
 from repro.core.qtensor import QTensor
@@ -128,12 +129,13 @@ def bench_scheduler(out, cfg, model, params, *, backend, smoke: bool,
     gc.disable()
     try:
         for _ in range(repeats):
-            r = serve_scheduled(cfg, params, reqs, slots=slots,
-                                max_seq=max_seq, compiled=comp)
+            r = run_sanitized(lambda: serve_scheduled(
+                cfg, params, reqs, slots=slots, max_seq=max_seq,
+                compiled=comp))
             if r["decode_tok_s"] > sched["decode_tok_s"]:
                 sched = r
-            r = serve_lockstep(cfg, model, params, reqs, slots=slots,
-                               compiled=comp_ls)
+            r = run_sanitized(lambda: serve_lockstep(
+                cfg, model, params, reqs, slots=slots, compiled=comp_ls))
             if r["decode_tok_s"] > lock["decode_tok_s"]:
                 lock = r
     finally:
@@ -233,13 +235,13 @@ def bench_paged(out, cfg, model, params, *, smoke: bool) -> bool:
     for gap in gaps:
         reqs = make_workload(cfg.vocab_size, n_requests=n_req,
                              seed=int(gap * 100) + 29, mean_gap=gap, **wl)
-        d = serve_scheduled(cfg, params, reqs, slots=d_slots,
-                            max_seq=max_seq, compiled=d_comp,
-                            prefill_chunk=psz)
-        p = serve_scheduled(cfg, params, reqs, slots=p_slots,
-                            max_seq=max_seq, compiled=p_comp, store="paged",
-                            page_size=psz, num_pages=num_pages,
-                            prefill_chunk=psz)
+        d = run_sanitized(lambda: serve_scheduled(
+            cfg, params, reqs, slots=d_slots, max_seq=max_seq,
+            compiled=d_comp, prefill_chunk=psz))
+        p = run_sanitized(lambda: serve_scheduled(
+            cfg, params, reqs, slots=p_slots, max_seq=max_seq,
+            compiled=p_comp, store="paged", page_size=psz,
+            num_pages=num_pages, prefill_chunk=psz))
         for q in reqs:
             total += 1
             if np.array_equal(d.requests[q.rid]["tokens"],
@@ -344,9 +346,9 @@ def bench_backend_pair(cfg, model, params, prompts, *, gen, repeats):
     try:
         for _ in range(repeats):
             for b in BACKENDS:
-                r = serve_requests(cfg, model, params, prompts, gen=gen,
-                                   compiled=compiled[b],
-                                   collect_logits=False)
+                r = run_sanitized(lambda b=b: serve_requests(
+                    cfg, model, params, prompts, gen=gen,
+                    compiled=compiled[b], collect_logits=False))
                 best[b] = _fold_best(best[b], r)
     finally:
         if gc_was_on:
@@ -392,6 +394,7 @@ def main(argv=None):
 
     if args.paged_only:
         ok = bench_paged(out, cfg, model, params, smoke=args.smoke)
+        ok &= sanitizer_gate(out)
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(out, f, indent=2)
@@ -406,9 +409,9 @@ def main(argv=None):
                        compiled=compiled_fp)                       # warm
     r = None
     for _ in range(repeats):
-        r = _fold_best(r, serve_requests(cfg, model, params, prompts,
-                                         gen=gen, compiled=compiled_fp,
-                                         collect_logits=False))
+        r = _fold_best(r, run_sanitized(lambda: serve_requests(
+            cfg, model, params, prompts, gen=gen, compiled=compiled_fp,
+            collect_logits=False)))
     mem = weight_memory(params)
     out["rows"]["fp"] = {
         "prefill_tok_s": r["prefill_tok_s"], "decode_tok_s": r["decode_tok_s"],
@@ -487,6 +490,9 @@ def main(argv=None):
 
     # ---- paged store vs dense store (long-tailed Poisson sweep) ------------
     ok_all &= bench_paged(out, cfg, model, params, smoke=args.smoke)
+
+    # every timed section above ran under the transfer guard
+    ok_all &= sanitizer_gate(out)
 
     if args.json:
         with open(args.json, "w") as f:

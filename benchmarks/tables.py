@@ -22,7 +22,7 @@ from repro.core.tesseraq import (HANDCRAFTED_SOFT_RATE, TesseraQConfig,
 def _quant(cfg, params, qcfg, method, init, tcfg=None, batches=None, **kw):
     t0 = time.time()
     out = quantize_model(cfg, params, batches or C.calib_batches(cfg), qcfg,
-                         method=method, init=init, tcfg=tcfg or C.TCFG, **kw)
+                         method=method, init=init, tcfg=tcfg or C.bench_tcfg(), **kw)
     return out + (time.time() - t0,)
 
 
@@ -76,7 +76,7 @@ def table3_w4a4():
     for name, method, init in [("rtn", "none", "rtn"), ("awq", "none", "awq"),
                                ("tesseraq", "tesseraq", "awq")]:
         pq, _, _ = quantize_model(cfg, params, C.calib_batches(cfg), qcfg,
-                                  method=method, init=init, tcfg=C.TCFG,
+                                  method=method, init=init, tcfg=C.bench_tcfg(),
                                   ctx=ctx_a4)[0:3]
         from repro.eval.ppl import perplexity
         ppl = perplexity(cfg, pq, C.eval_ppl_batches(cfg), ctx_a4)
@@ -87,7 +87,7 @@ def table3_w4a4():
     for name, method, init in [("quarot+gptq", "none", "gptq"),
                                ("quarot+tesseraq", "tesseraq", "rtn")]:
         pq, _, _ = quantize_model(cfg, rparams, C.calib_batches(cfg), qcfg,
-                                  method=method, init=init, tcfg=C.TCFG,
+                                  method=method, init=init, tcfg=C.bench_tcfg(),
                                   ctx=ctx_a4)[0:3]
         from repro.eval.ppl import perplexity
         ppl = perplexity(cfg, pq, C.eval_ppl_batches(cfg), ctx_a4)
@@ -110,7 +110,7 @@ def table10_w4a8():
     for name, method, init in [("rtn", "none", "rtn"), ("awq", "none", "awq"),
                                ("tesseraq", "tesseraq", "awq")]:
         pq, _, _ = quantize_model(cfg, params, C.calib_batches(cfg), qcfg,
-                                  method=method, init=init, tcfg=C.TCFG,
+                                  method=method, init=init, tcfg=C.bench_tcfg(),
                                   ctx=ctx_a8)[0:3]
         ppl = perplexity(cfg, pq, C.eval_ppl_batches(cfg), ctx_a8)
         rows.append((f"W4A8/{name}", "ppl", ppl))
@@ -125,8 +125,8 @@ def table5_calibration():
     rows = []
     for n_samples, bs in [(4, 2), (8, 4), (16, 4)]:
         batches = C.calib_batches(cfg, n=max(1, n_samples // 4), bs=4)
-        tcfg = TesseraQConfig(par_iterations=C.TCFG.par_iterations,
-                              steps_per_iteration=C.TCFG.steps_per_iteration,
+        tcfg = TesseraQConfig(par_iterations=C.bench_tcfg().par_iterations,
+                              steps_per_iteration=C.bench_tcfg().steps_per_iteration,
                               batch_size=bs)
         (pq, _, _), dt = _quant(cfg, params, qcfg, "tesseraq", "awq",
                                 tcfg=tcfg, batches=batches)[:3], 0.0
@@ -145,8 +145,8 @@ def table6_ablation():
     for par in (False, True):
         for dst in (False, True):
             tcfg = TesseraQConfig(
-                par_iterations=C.TCFG.par_iterations if par else 1,
-                steps_per_iteration=C.TCFG.steps_per_iteration,
+                par_iterations=C.bench_tcfg().par_iterations if par else 1,
+                steps_per_iteration=C.bench_tcfg().steps_per_iteration,
                 par=par, dst=dst, batch_size=4)
             pq, _, _ = _quant(cfg, params, qcfg, "tesseraq", "awq",
                               tcfg=tcfg)[:3]
@@ -202,8 +202,9 @@ def table8_memory_throughput():
         packed = qpack(jnp.asarray(codes), bits, axis=0)
         scale = jnp.asarray(rng.random((4, 256)), jnp.float32)
         zero = jnp.zeros((4, 256), jnp.float32)
-        f = lambda: quant_matmul_op(x, packed, scale, zero, bits=bits,
-                                    group_size=128).block_until_ready()
+        f = lambda p=packed, s=scale, z=zero, b=bits: \
+            quant_matmul_op(x, p, s, z, bits=b,
+                            group_size=128).block_until_ready()
         f()
         t0 = time.time()
         for _ in range(3):
@@ -218,14 +219,14 @@ def fig3_schedule():
     """Paper Fig 3: PAR soft-rate schedule robustness."""
     cfg, params = C.trained_model()
     qcfg = QuantConfig(bits=2, group_size=16)
-    K = C.TCFG.par_iterations
+    K = C.bench_tcfg().par_iterations
     scheds = {"handcrafted": HANDCRAFTED_SOFT_RATE}
     for t in (2, 4):
         scheds[f"exp_t{t}"] = tuple(exp_soft_rate(k, K, t) for k in range(K))
     rows = []
     for name, sr in scheds.items():
         tcfg = TesseraQConfig(par_iterations=K,
-                              steps_per_iteration=C.TCFG.steps_per_iteration,
+                              steps_per_iteration=C.bench_tcfg().steps_per_iteration,
                               soft_rate=sr, batch_size=4)
         pq, _, _ = _quant(cfg, params, qcfg, "tesseraq", "awq", tcfg=tcfg)[:3]
         ppl = C.evaluate(cfg, pq)["ppl"]

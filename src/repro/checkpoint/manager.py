@@ -121,7 +121,8 @@ class CheckpointManager:
         out = []
         shard_leaves = (_flatten(shardings)[0] if shardings is not None
                         else [None] * len(leaves))
-        for arr, ref, shd in zip(leaves, like_leaves, shard_leaves):
+        for arr, ref, shd in zip(leaves, like_leaves, shard_leaves,
+                                  strict=True):
             a = jnp_cast(arr, ref)
             if shd is not None:
                 a = jax.device_put(a, shd)

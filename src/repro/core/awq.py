@@ -56,7 +56,7 @@ def awq_leaf(w, stats, qcfg: QuantConfig):
         # transform instead of crashing in _act_scale(mean_abs, None)
         warnings.warn("awq_leaf: grid search found no finite candidate "
                       "(degenerate capture stats); falling back to "
-                      "alpha=0.0, clip=1.0")
+                      "alpha=0.0, clip=1.0", stacklevel=2)
         alpha, clip = 0.0, 1.0
     s_ch = _act_scale(stats.mean_abs, alpha)
     wt = jnp.asarray(wf * s_ch[..., :, None])

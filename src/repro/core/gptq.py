@@ -77,6 +77,7 @@ def _gptq_matrix(W: np.ndarray, H: np.ndarray, qcfg: QuantConfig, *,
                 if not stale_group_scales:
                     in_blk = min(i2, col + g) - col
                     seg[:in_blk] = Wb[j:j + in_blk]
+                # reprolint: ok[alias-push] — seg is mutated BEFORE the push and never after; snapshot is stable
                 s, z = Q.compute_scale_zero(jnp.asarray(seg), qcfg)
                 scale, zero = np.asarray(s)[0], np.asarray(z)[0]
                 scales[col // g], zeros[col // g] = scale, zero

@@ -163,6 +163,7 @@ def quantize_model(cfg: ModelConfig, params: Dict, batches: List[Dict],
         if aux_parts[0] is not None:
             aux = jnp.concatenate([jnp.asarray(a) for a in aux_parts], 0)
 
+        # reprolint: ok[jit-cache] — one jit per STAGE (few, distinct apply fns), reused for every block in it
         napply = jax.jit(stage.apply)
         # the reconstruction inner loop compiles once per stage and is
         # reused for every identically-shaped block in it

@@ -102,10 +102,12 @@ _SYNC_COUNT = 0
 def host_read(x):
     """Blocking device->host read, counted.  Every code path that pulls a
     value out of the reconstruction loop goes through here so benchmarks can
-    assert the engine's <=1-sync-per-iteration guarantee."""
+    assert the engine's <=1-sync-per-iteration guarantee — and it reads via
+    the explicit ``jax.device_get`` form ``transfer_guard("disallow")``
+    permits, so sanitized bench runs see only counted syncs."""
     global _SYNC_COUNT
     _SYNC_COUNT += 1
-    return np.asarray(x)
+    return np.asarray(jax.device_get(x))
 
 
 def sync_count() -> int:
@@ -163,14 +165,27 @@ def _harden_jit(states, want_soft, use_inf: bool):
     return new
 
 
-def harden_device(states, target_soft_rate: float, use_inf: bool):
+def harden_device(states, target_soft_rate: float, use_inf: bool, *,
+                  mesh=None):
     """Device-side counterpart of ``tesseraq.harden`` (same freeze sets,
-    including ties — verified bit-for-bit by tests/test_recon_engine.py)."""
+    including ties — verified bit-for-bit by tests/test_recon_engine.py).
+
+    With ``mesh`` the threshold scalar is placed onto the mesh so the jit
+    sees colocated args when ``states`` lives there (mesh runs keep the
+    whole state tree mesh-resident between PAR iterations)."""
     total = sum(int(np.prod(st["hard"].shape)) for st in states.values())
     want_soft = int(total * target_soft_rate)
     if want_soft >= total:
         return states                                  # nothing to freeze
-    return _harden_jit(states, jnp.asarray(want_soft, jnp.int32), use_inf)
+    # explicit device_put: a bare jnp.asarray(int, int32) is an implicit
+    # scalar transfer the sanitizer's transfer_guard would reject
+    want = np.int32(want_soft)
+    if mesh is None:
+        want_d = jax.device_put(want)
+    else:
+        from jax.sharding import NamedSharding
+        want_d = jax.device_put(want, NamedSharding(mesh, P()))
+    return _harden_jit(states, want_d, use_inf)
 
 
 # ---------------------------------------------------------------------------
@@ -443,6 +458,25 @@ def stage_plan(X, Y, aux=None, *, batch_size: int, total_steps: int,
                      grad_chunk_count(bs, N))
 
 
+def _mesh_place(mesh, tree, specs):
+    """Explicitly ``device_put`` every leaf of ``tree`` onto ``mesh`` per
+    ``specs`` (a full PartitionSpec tree, or one prefix ``P()`` for the
+    whole tree).  Without this, the first sharded ``run`` after ``init``
+    reshards single-device carries implicitly at dispatch — a silent
+    device-to-device broadcast the sanitizer's ``transfer_guard``
+    (correctly) rejects.  Already-placed leaves are a no-op."""
+    if tree is None:
+        return None
+    from jax.sharding import NamedSharding
+    if isinstance(specs, P):
+        sh = NamedSharding(mesh, specs)
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+    return jax.device_put(tree, shardings)
+
+
 class ReconstructionEngine:
     """Scanned, donated inner loop over a pre-staged :class:`BatchPlan`.
 
@@ -602,6 +636,9 @@ class ReconstructionEngine:
                 run, mesh=mesh,
                 in_specs=(tr_in, opt_in, frz_in, bspec, bspec, bspec, P()),
                 out_specs=(tr_in, opt_in, P()))
+            # run() re-places carries onto the mesh explicitly with these
+            # (no-op once sharded; see _mesh_place)
+            self._carry_specs = (tr_in, opt_in, frz_in)
 
         # trainables + optimizer state are loop carries: donate them so the
         # update happens in place where the backend supports aliasing —
@@ -609,9 +646,13 @@ class ReconstructionEngine:
         # unusable-donation warnings (same guard as adam.jitted_update)
         donate = donate and jax.default_backend() != "cpu"
         self._run = jax.jit(run, donate_argnums=(0, 1) if donate else ())
+        self._init = jax.jit(self.opt.init)
 
     def init(self, trainables):
-        return self.opt.init(trainables)
+        # compiled: the optimizer's zero-state builder runs eager jnp.zeros
+        # (a scalar-constant device_put per leaf) which the sanitizer's
+        # transfer_guard rejects; under jit it is part of the program
+        return self._init(trainables)
 
     def run(self, trainables, opt_state, frozen, plan: BatchPlan, *,
             start: int = 0, steps: Optional[int] = None):
@@ -620,7 +661,11 @@ class ReconstructionEngine:
         last_loss) with the loss still on device — reading it is the
         caller's (counted) choice."""
         steps = plan.total_steps - start if steps is None else steps
-        idx = plan.index_plan[start:start + steps]
+        # static slice, not basic indexing: eager `x[a:b]` lowers to a
+        # dynamic_slice whose scalar index operands are fresh host->device
+        # transfers every call — the sanitizer's transfer_guard rejects it
+        idx = jax.lax.slice_in_dim(plan.index_plan, start, start + steps,
+                                   axis=0)
         chunks = grad_chunk_count(idx.shape[1], plan.X.shape[0])
         if chunks != plan.chunks:
             raise ValueError(
@@ -641,5 +686,11 @@ class ReconstructionEngine:
                 "recon_engine.CANONICAL_LANE_CHUNKS to a multiple of it "
                 "before building engines — note this changes the canonical "
                 "rounding trajectory for batches wider than the cap")
+        if self.mesh is not None:
+            tr_s, opt_s, frz_s = self._carry_specs
+            trainables = _mesh_place(self.mesh, trainables, tr_s)
+            opt_state = _mesh_place(self.mesh, opt_state, opt_s)
+            frozen = _mesh_place(self.mesh, frozen, frz_s)
+            idx = _mesh_place(self.mesh, idx, P())
         return self._run(trainables, opt_state, frozen,
                          plan.X, plan.Y, plan.aux, idx)

@@ -109,7 +109,14 @@ def reconstruct_block(apply: Callable, bp, X, Y, aux, qmeta: Dict,
                 log.append({"step": t0 + n - 1,
                             "loss": float(RE.host_read(lv))})
     else:
-        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        # same per-stage memoization as the engine branch: block weights
+        # flow through the `frozen` ARGUMENT, so one traced grad_fn serves
+        # every identically-shaped block the stage cache lives across
+        grad_fn = cache.get("legacy-grad") if cache is not None else None
+        if grad_fn is None:
+            grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+            if cache is not None:
+                cache["legacy-grad"] = grad_fn
         N = X.shape[0]
         bs = min(batch_size, N)
         plan = RE.draw_index_plan(N, bs, steps, seed)

@@ -54,6 +54,7 @@ Two interchangeable inner-loop engines (``TesseraQConfig.engine``):
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
@@ -102,27 +103,37 @@ class TesseraQConfig:
     carry_opt_state: bool = True
 
 
-def _leaf_state(w, meta, qcfg: QuantConfig):
-    """Per-linear PAR/DST state. Weights already in the transformed domain if
-    AWQ act_scale is present (we optimize rounding of W*act_scale)."""
+@partial(jax.jit, static_argnames=("qcfg",))
+def _leaf_state_jit(w, scale, zero, act_scale, *, qcfg: QuantConfig):
+    # compiled so building per-block state stays free of eager scalar-
+    # constant device_puts — the sanitizer's transfer_guard sees nothing
     wf = jnp.asarray(w, jnp.float32)
-    if meta.get("act_scale") is not None:
-        wf = wf * meta["act_scale"][..., :, None]
-    scale, zero = meta["scale"], meta["zero"]
+    if act_scale is not None:
+        wf = wf * act_scale[..., :, None]
     g = Q.resolve_group(wf.shape[-2], qcfg.group_size)
     wg = wf.reshape(wf.shape[:-2] + (wf.shape[-2] // g, g, wf.shape[-1]))
     ratio = wg / scale[..., None, :]
     base = jnp.floor(ratio)
     frac = jnp.clip(ratio - base, 1e-4, 1 - 1e-4)
     nu = jnp.log(frac) - jnp.log1p(-frac)            # logit
+    return (nu.astype(jnp.float32), jnp.zeros_like(scale),
+            jnp.zeros(nu.shape, jnp.int8), base)
+
+
+def _leaf_state(w, meta, qcfg: QuantConfig):
+    """Per-linear PAR/DST state. Weights already in the transformed domain if
+    AWQ act_scale is present (we optimize rounding of W*act_scale)."""
+    scale, zero = meta["scale"], meta["zero"]
+    act_scale = meta.get("act_scale")
+    nu, v, hard, base = _leaf_state_jit(w, scale, zero, act_scale, qcfg=qcfg)
     return {
-        "nu": nu.astype(jnp.float32),                 # grouped layout
-        "v": jnp.zeros_like(scale),
-        "hard": jnp.zeros(nu.shape, jnp.int8),        # 0 soft, +-1 frozen
+        "nu": nu,                                     # grouped layout
+        "v": v,
+        "hard": hard,                                 # 0 soft, +-1 frozen
         "base": base,
         "scale": scale,
         "zero": zero,
-        "act_scale": meta.get("act_scale"),
+        "act_scale": act_scale,
     }
 
 
@@ -151,6 +162,12 @@ def hardness_score(nu: jax.Array) -> jax.Array:
     return jnp.abs(jax.nn.sigmoid(nu) - 0.5)          # HS (Eq. 6)
 
 
+# jitted alias for the reference harden: eager hardness_score embeds the 0.5
+# constant as a per-call scalar device_put (transfer_guard rejects it); under
+# jit the value is bit-identical, so engine parity is untouched
+_hardness_score_jit = jax.jit(hardness_score)
+
+
 def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
     """NumPy reference hardening: freeze the HIGHEST-HS soft variables (those
     already nearly binary — rounding them perturbs the block least) so that
@@ -160,7 +177,7 @@ def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
     ``recon_engine.harden_device``."""
     scores = []
     for st in states.values():
-        s = np.asarray(hardness_score(st["nu"])).ravel()
+        s = np.asarray(_hardness_score_jit(st["nu"])).ravel()
         m = np.asarray(st["hard"]).ravel() == 0
         scores.append(s[m])
     all_scores = np.concatenate(scores) if scores else np.zeros(0)
@@ -178,15 +195,16 @@ def harden(states: Dict, target_soft_rate: float, use_inf: bool) -> Dict:
     for p, st in states.items():
         nu = np.asarray(st["nu"])
         hard = np.asarray(st["hard"]).copy()
-        hs = np.asarray(hardness_score(st["nu"]))
+        hs = np.asarray(_hardness_score_jit(st["nu"]))
         freeze = (hard == 0) & (hs >= thresh)
         sign = np.where(nu > 0, 1, -1).astype(np.int8)
         hard = np.where(freeze, sign, hard)
         st = dict(st)
         st["hard"] = jnp.asarray(hard)
         if use_inf:
-            st["nu"] = jnp.asarray(np.where(hard != 0, hard * 40.0, nu),
-                                   jnp.float32)
+            # host-side astype keeps the push zero-copy (guard-clean)
+            st["nu"] = jnp.asarray(
+                np.where(hard != 0, hard * 40.0, nu).astype(np.float32))
         new[p] = st
     return new
 
@@ -247,13 +265,20 @@ def _schedule_index(k: int, K: int, n_rates: int) -> int:
             if K > 1 else n_rates - 1)
 
 
+# DST fold factor, compiled: keeps finalization free of eager scalar ops
+_dst_factor = jax.jit(lambda v: 2.0 * jax.nn.sigmoid(v))
+
+
 @jax.jit
-def _log_stats(lv, states):
+def _log_stats(lv, hard):
     """Fused per-iteration log payload: [last loss, global soft rate] in a
-    single device array so the host pulls it with ONE blocking read."""
-    soft = sum(jnp.sum((st["hard"] == 0).astype(jnp.float32))
-               for st in states.values())
-    total = sum(int(np.prod(st["hard"].shape)) for st in states.values())
+    single device array so the host pulls it with ONE blocking read.  Takes
+    the hardened masks alone (not the whole state tree): on a mesh run the
+    trainable leaves come back sharded while the masks live on the default
+    device, and mixing them as jit args would force an implicit
+    device-to-device reshard the sanitizer's transfer_guard rejects."""
+    soft = sum(jnp.sum((h == 0).astype(jnp.float32)) for h in hard.values())
+    total = sum(int(np.prod(h.shape)) for h in hard.values())
     return jnp.stack([lv, soft / max(total, 1)])
 
 
@@ -299,6 +324,12 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
 
         if cache is not None:
             cache[cache_key] = step_fn
+    # compiled zero-state builder, same rationale as the engine's _init
+    init_fn = cache.get("reference-init") if cache is not None else None
+    if init_fn is None:
+        init_fn = jax.jit(opt.init)
+        if cache is not None:
+            cache["reference-init"] = init_fn
 
     K = tcfg.par_iterations if tcfg.par else 1
     T = tcfg.steps_per_iteration
@@ -311,13 +342,15 @@ def _run_reference(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
                             tcfg.use_inf_freeze)
         tr = _trainables(states, tcfg.dst)
         if opt_state is None or not tcfg.carry_opt_state:
-            opt_state = opt.init(tr)
+            opt_state = init_fn(tr)
         lv = None
         for t in range(T):
             idx = plan[k * T + t]
-            xb = jnp.asarray(X[idx])
-            yb = jnp.asarray(Y[idx], jnp.float32)
-            auxb = jnp.asarray(aux[idx]) if aux is not None else None
+            # the per-step host gather is this engine's DESIGN (host-loop
+            # oracle); explicit device_put keeps it guard-clean and counted
+            xb = jax.device_put(X[idx])
+            yb = jax.device_put(np.asarray(Y[idx], np.float32))
+            auxb = jax.device_put(aux[idx]) if aux is not None else None
             tr, opt_state, lv = step_fn(tr, opt_state,
                                         {"bp": bp, "sts": states},
                                         xb, yb, auxb)
@@ -420,13 +453,34 @@ def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
     plan = RE.stage_plan(X, Y, aux, batch_size=tcfg.batch_size,
                          total_steps=K * T, seed=tcfg.seed, mesh=mesh)
 
+    # mesh runs keep the WHOLE state tree explicitly mesh-placed: harden,
+    # the engine and the log jit all take (parts of) it as arguments, and
+    # any leaf left behind on the default device would be resharded
+    # implicitly at dispatch — a silent device-to-device broadcast the
+    # sanitizer's transfer_guard rejects.  Trainables follow their TP
+    # placement (ParamSpec contract), everything else the frozen-state
+    # specs; pure-DP meshes replicate (prefix P()).
+    states_sp = None
+    if mesh is not None:
+        tr_sp, _, frz_sp = eng._carry_specs
+        if isinstance(tr_sp, RE.P):
+            states_sp = tr_sp
+        else:
+            sts_sp = frz_sp["sts"]
+            states_sp = {p: {k: (tr_sp[p][k] if k in trainable_keys
+                                 else sts_sp[p][k])
+                             for k in st}
+                         for p, st in states.items()}
+
     sr = list(tcfg.soft_rate)
     opt_state = None
     for k in range(K):
+        if mesh is not None:
+            states = RE._mesh_place(mesh, states, states_sp)
         if tcfg.par:
             states = RE.harden_device(
                 states, sr[_schedule_index(k, K, len(sr))],
-                tcfg.use_inf_freeze)
+                tcfg.use_inf_freeze, mesh=mesh)
         tr = _trainables(states, tcfg.dst)
         # strip trainable entries from the side state: tr owns those buffers
         # (and donates them), frozen carries everything else
@@ -439,7 +493,10 @@ def _run_device(apply, bp, X, Y, aux, qcfg, tcfg: TesseraQConfig, states,
                                     plan, start=k * T, steps=T)
         states = _merge(states, tr, tcfg.dst)
         if log is not None:
-            stats = RE.host_read(_log_stats(lv, states))
+            # masks only: on mesh runs they are mesh-resident alongside lv
+            # (see _log_stats docstring)
+            hard = {p: st["hard"] for p, st in states.items()}
+            stats = RE.host_read(_log_stats(lv, hard))
             log.append({"iter": k, "loss": float(stats[0]),
                         "soft_rate": float(stats[1])})
     return states
@@ -492,7 +549,7 @@ def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
                          np.asarray(st["nu"]) > 0).astype(np.float32)
         q = np.clip(np.asarray(st["base"]) + np.asarray(st["zero"])[..., None, :]
                     + alpha, 0, qcfg.qmax)
-        dst_factor = (2.0 * jax.nn.sigmoid(st["v"])) if tcfg.dst else None
+        dst_factor = _dst_factor(st["v"]) if tcfg.dst else None
         scale_eff = np.asarray(st["scale"]) * (np.asarray(dst_factor)
                                                if dst_factor is not None else 1.0)
         w = (q - np.asarray(st["zero"])[..., None, :]) * scale_eff[..., None, :]
@@ -500,13 +557,14 @@ def reconstruct_block(apply: Callable, bp, X: np.ndarray, Y: np.ndarray,
         if st["act_scale"] is not None:
             w = w / np.asarray(st["act_scale"])[..., :, None]
         orig = get_path(bp, p)
-        bp = set_path(bp, p, jnp.asarray(w, orig.dtype))
+        bp = set_path(bp, p, jnp.asarray(w).astype(orig.dtype))
         new_meta[p] = {
             "scale": jnp.asarray(scale_eff),          # DST folded in
             "zero": st["zero"],
             "act_scale": st["act_scale"],
             "dst": jnp.asarray(dst_factor) if dst_factor is not None else None,
-            "codes": jnp.asarray(q, jnp.uint8).reshape(_wshape(st["nu"])),
+            "codes": jnp.asarray(q.astype(np.uint8)).reshape(
+                _wshape(st["nu"])),
             # final hardened mask (grouped layout) — the engine-parity tests
             # pin it bit-for-bit across device/sharded
             "hard": np.asarray(st["hard"]),

@@ -1,0 +1,4 @@
+from repro.debug.sanitize import (RecompileError, assert_no_recompiles,
+                                  sanitized)
+
+__all__ = ["RecompileError", "assert_no_recompiles", "sanitized"]

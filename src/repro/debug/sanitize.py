@@ -1,0 +1,82 @@
+"""Runtime sanitizer harness — the dynamic half of the repo contracts that
+``tools/reprolint`` checks statically.
+
+``sanitized()`` composes jax's runtime guards into one context manager:
+
+  * ``transfer_guard="disallow"`` — IMPLICIT transfers raise.  On the CPU
+    backend the teeth are on host->device: eager ops embedding host scalar
+    constants (``jnp.zeros``, ``x * 2.5``, dtype-converting
+    ``jnp.asarray``), python scalars handed to jitted steps as traced
+    args, and eager basic indexing/slicing (dynamic_slice scalar index
+    operands) all device_put per call and are rejected.  Explicit
+    ``jax.device_put`` / ``jax.device_get`` stay legal, which is exactly
+    the contract the ``host-sync`` lint rule enforces on the timed serving
+    loop: every transfer must be spelled out (and therefore visible in
+    review and in profiles).
+  * ``checking_leaks`` — tracer leaks out of a traced function raise
+    instead of silently capturing stale values.
+  * ``debug_nans`` (opt-in) — NaN outputs raise at the producing op.
+
+``assert_no_recompiles`` pins the compile-once contract of the hot loops
+(scheduler decode, recon engine scanned step): a jitted function that
+re-traces inside the guarded region raises ``RecompileError``.  Benches run
+their timed sections under ``sanitized(transfer_guard=True)`` and record a
+``sanitizer_clean`` gate; the CI ``sanitize`` leg runs the scheduler/recon
+smoke tests under the full stack.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+
+
+class RecompileError(AssertionError):
+    """A jitted function re-traced inside an ``assert_no_recompiles`` region."""
+
+
+def _cache_size(fn) -> int:
+    # PjitFunction exposes _cache_size(); tolerate plain callables so the
+    # guard can wrap a mixed list (untracked fns contribute 0 growth).
+    probe = getattr(fn, "_cache_size", None)
+    return int(probe()) if callable(probe) else 0
+
+
+@contextlib.contextmanager
+def assert_no_recompiles(*fns, allowed: int = 0) -> Iterator[None]:
+    """Fail if any jitted ``fn`` grows its executable cache by more than
+    ``allowed`` entries inside the block.
+
+    Use ``allowed=1`` around a region that includes the FIRST call (one
+    warm-up trace is the contract), ``allowed=0`` around steady state.
+    """
+    before = [_cache_size(f) for f in fns]
+    yield
+    for f, b in zip(fns, before, strict=True):
+        grew = _cache_size(f) - b
+        if grew > allowed:
+            name = getattr(f, "__name__", repr(f))
+            raise RecompileError(
+                f"{name} compiled {grew} new executable(s) inside an "
+                f"assert_no_recompiles(allowed={allowed}) region — an "
+                f"argument changed shape/dtype or a non-hashable static "
+                f"captured a fresh object (PR 4 bug class)")
+
+
+@contextlib.contextmanager
+def sanitized(*, transfer_guard: bool = True, check_leaks: bool = True,
+              debug_nans: bool = False) -> Iterator[None]:
+    """Run a block under the composed jax sanitizers (see module docstring).
+
+    All three guards save and restore the previous configuration, so nesting
+    and use inside test fixtures is safe.
+    """
+    with contextlib.ExitStack() as stack:
+        if transfer_guard:
+            stack.enter_context(jax.transfer_guard("disallow"))
+        if check_leaks:
+            stack.enter_context(jax.checking_leaks())
+        if debug_nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield

@@ -17,15 +17,35 @@ def _with_backend(ctx, backend: Optional[str]):
         ctx, kernel_backend=backend)
 
 
+# jit cache keyed on the (hashable, frozen) config + forward ctx: the eval
+# helpers run once per artifact per backend, and rebuilding the jit each
+# call re-traced the whole model every time (the PR 4 cache-miss class)
+_JIT_CACHE: Dict = {}
+
+
+def _jitted(kind: str, cfg, ctx):
+    key = (kind, cfg, ctx)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        model = get_model(cfg)
+        if kind == "loss":
+            fn = jax.jit(lambda p, b: model.loss_fn(p, b, ctx))
+        else:
+            # per-sequence NLL via the model loss on a single row
+            fn = jax.jit(lambda p, tokens:
+                         -model.loss_fn(p, {"tokens": tokens}, ctx))
+        _JIT_CACHE[key] = fn
+    return fn
+
+
 def perplexity(cfg, params, batches: List[Dict], ctx=DEFAULT_CTX,
                backend: Optional[str] = None) -> float:
     """exp(mean NLL) over token batches (the WikiText2-style metric).
 
     ``backend`` overrides the QTensor matmul dispatch ("xla"/"pallas") when
     evaluating a PACKED model; it is inert for plain/fake-quant params."""
-    model = get_model(cfg)
     ctx = _with_backend(ctx, backend)
-    loss_fn = jax.jit(lambda p, b: model.loss_fn(p, b, ctx))
+    loss_fn = _jitted("loss", cfg, ctx)
     tot, n = 0.0, 0
     for b in batches:
         b = {k: jnp.asarray(v) for k, v in b.items()}
@@ -38,14 +58,8 @@ def choice_accuracy(cfg, params, tasks: List[Dict], ctx=DEFAULT_CTX,
                     backend: Optional[str] = None) -> float:
     """Synthetic zero-shot multiple-choice: score each candidate continuation
     by sequence log-likelihood, count argmax hits (PIQA/ARC-style protocol)."""
-    model = get_model(cfg)
     ctx = _with_backend(ctx, backend)
-
-    @jax.jit
-    def seq_logp(p, tokens):
-        batch = {"tokens": tokens}
-        # per-sequence NLL via the model loss on a single row
-        return -model.loss_fn(p, batch, ctx)
+    seq_logp = _jitted("seq_logp", cfg, ctx)
 
     hits = 0
     for t in tasks:

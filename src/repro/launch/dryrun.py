@@ -1,4 +1,5 @@
 import os
+# reprolint: ok[env-read] — intentional WRITE that must run before jax's first import locks the device count
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: prove every (arch x shape x mesh) lowers, compiles,
@@ -119,6 +120,7 @@ def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, qcfg, *,
             lowered = jax.jit(
                 decode_step,
                 in_shardings=(pspec, cspec, tspec["t"], tspec["p"]),
+                # reprolint: ok[donation-guard] — AOT lowering only, never executed; aliasing feeds memory_analysis
                 donate_argnums=(1,)).lower(
                     params_struct, ins["cache"], ins["tokens"], ins["pos"])
         return lowered.compile()

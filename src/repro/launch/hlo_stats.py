@@ -82,6 +82,40 @@ def collective_bytes(hlo_text: str, default_group: int) -> Dict:
             "n_ops": count}
 
 
+_HOST_XFER_RE = re.compile(
+    r"=\s+[\w\[\],\.\s()]*?(copy-start|copy)\([^\n]*is_host_transfer=true")
+_INFEED_RE = re.compile(r"=\s+[\w\[\],\.\s()]*?\b(infeed|outfeed)\(")
+
+
+def host_transfer_ops(hlo_text: str) -> int:
+    """Count ops in optimized HLO that move data across the host boundary
+    (``is_host_transfer=true`` copies plus infeed/outfeed).  The HLO lint
+    pins this to ZERO for the hot serving/recon programs: a nonzero count
+    means a host value leaked into the jitted computation."""
+    n = 0
+    for line in hlo_text.splitlines():
+        if _HOST_XFER_RE.search(line) or _INFEED_RE.search(line):
+            n += 1
+    return n
+
+
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    """Count collective ops per kind in optimized HLO (same matcher as
+    ``collective_bytes``, without the byte model) — the HLO lint asserts
+    the observed kinds are a subset of the program's contract (e.g. the
+    sharded recon step performs exactly one fused all-gather)."""
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        kind = m.group(3)
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
 @dataclasses.dataclass
 class RooflineTerms:
     flops: float

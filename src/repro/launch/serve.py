@@ -110,6 +110,11 @@ def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None,
             jax.jit(decode_step, donate_argnums=cache_donate_argnums(1)))
 
 
+# the +1 constant lives inside the compiled program instead of being
+# device_put per decode step (transfer_guard-clean)
+_inc1 = jax.jit(lambda p: p + 1)
+
+
 def serve_requests(cfg, model, params, prompts, *, gen: int,
                    kernel_backend=None, act_bits=None, compiled=None,
                    collect_logits=True, max_seq=None) -> "ServeResult":
@@ -138,26 +143,32 @@ def serve_requests(cfg, model, params, prompts, *, gen: int,
 
     cache = model.init_cache(B, max_seq)
     t0 = time.time()
-    logits, cache = pstep(params, {"tokens": jnp.asarray(prompts)}, cache)
-    logits.block_until_ready()
+    logits, cache = pstep(params, {"tokens": jax.device_put(prompts)}, cache)
+    logits.block_until_ready()   # reprolint: ok[host-sync] — prefill timing boundary
     t_prefill = time.time() - t0
 
     all_logits = [logits] if collect_logits else None
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    pos = jnp.full((B,), prompt_len, jnp.int32)
+    # host-built then explicitly placed / jit-incremented: eager jnp.full
+    # and `pos + 1` each device_put a scalar constant per call, which the
+    # serving sanitizer's transfer_guard rejects
+    pos = jax.device_put(np.full((B,), prompt_len, np.int32))
     toks = [tok]
     t0 = time.time()
     for _ in range(gen - 1):
         logits, cache = dstep(params, cache, tok, pos)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        pos = pos + 1
+        pos = _inc1(pos)
         toks.append(tok)
         if collect_logits:
             all_logits.append(logits)
-    tok.block_until_ready()
+    tok.block_until_ready()   # reprolint: ok[host-sync] — closes the decode timing region
     t_decode = time.time() - t0
-    tok_mat = np.stack([np.asarray(t) for t in toks], 1)       # (B, gen)
-    lg_mat = (np.stack([np.asarray(a, np.float32) for a in all_logits], 1)
+    # reprolint: ok[host-sync] — off-clock host fetch; both timing regions already closed
+    tok_mat = np.stack([np.asarray(jax.device_get(t)) for t in toks], 1)
+    # reprolint: ok[host-sync] — off-clock host fetch of the opt-in logits trace
+    lg_mat = (np.stack([np.asarray(jax.device_get(a), np.float32)
+                        for a in all_logits], 1)
               if collect_logits else None)                     # (B, gen, V)
     res = {b: {"tokens": tok_mat[b],
                "logits": None if lg_mat is None else lg_mat[b],

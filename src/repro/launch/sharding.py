@@ -54,7 +54,9 @@ def resolve_spec(mesh, logical: tuple, shape, overrides=None) -> P:
     table = logical_table(mesh, overrides)
     out = []
     used = set()
-    for name, dim in zip(logical, shape):
+    # zip-to-shortest is the contract: a spec may name fewer dims than
+    # the tensor's rank (trailing dims replicate)
+    for name, dim in zip(logical, shape, strict=False):
         axes = table.get(name, ())
         if axes and dim % _axis_size(mesh, axes) == 0 \
                 and not (set(axes) & used):

@@ -125,7 +125,7 @@ def jit_train_step(harness: TrainHarness, mesh, params_struct, batch_struct):
         harness.step_fn,
         in_shardings=(pspec, ospec, bspec),
         out_shardings=(pspec, ospec, None),
-        donate_argnums=(0, 1),
+        donate_argnums=train_donate_argnums(0, 1),
     ), (pspec, ospec, bspec)
 
 
@@ -229,6 +229,16 @@ def cache_donate_argnums(*argnums: int) -> tuple:
     ~15% decode win, and ``write_slot`` admission becomes an in-place
     slot update instead of a full cache copy."""
     return argnums
+
+
+def train_donate_argnums(*argnums: int) -> tuple:
+    """Donation argnums for train-step param/optimizer carries — the ONE
+    place train-path donation policy lives.  Unlike the serve caches
+    (``cache_donate_argnums``), CPU XLA cannot alias the param/Adam
+    buffers, so donating them there only floods logs with
+    unusable-donation warnings: donate on accelerators, skip on CPU (the
+    same guard ``optim/adam.jitted_update`` applies inline)."""
+    return argnums if jax.default_backend() != "cpu" else ()
 
 
 def make_paged_install_step(model, *, page_size: int):

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_reduced_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus
-from repro.launch.steps import make_train_harness
+from repro.launch.steps import make_train_harness, train_donate_argnums
 from repro.optim.adam import cosine_schedule
 
 
@@ -66,7 +66,9 @@ def main(argv=None):
             params, opt_state = got[1]["params"], got[1]["opt"]
             print(f"[train] resumed from step {start}")
 
-    step_fn = jax.jit(harness.step_fn, donate_argnums=(0, 1))
+    # reprolint: ok[jit-cache] — CLI entry point: built once per process and reused by the whole loop
+    step_fn = jax.jit(harness.step_fn,
+                      donate_argnums=train_donate_argnums(0, 1))
 
     stop = {"flag": False}
 

@@ -22,6 +22,7 @@ Two :class:`CacheStore` implementations serve that contract behind the same
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -31,6 +32,14 @@ import numpy as np
 
 def _identity_shard(x, names):
     return x
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def zeros_jit(shape, dtype):
+    """Compiled zeros for cache allocation: eager ``jnp.zeros`` device_puts
+    its scalar fill constant on every call, which the serving sanitizer's
+    ``transfer_guard("disallow")`` rejects."""
+    return jnp.zeros(shape, dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -433,13 +442,13 @@ class PagedCacheStore:
             path = "/".join(prefix)
             ls = self.spec.leaf(path)
             if ls.kind != LEAF_TOKEN:
-                return jnp.zeros(tree.shape, tree.dtype)
+                return zeros_jit(tree.shape, tree.dtype)
             if (self.spec.slot_axis, ls.token_axis) != (1, 2):
                 raise NotImplementedError(
                     f"paged leaf {path!r}: pool layout assumes slot axis 1 "
                     f"/ token axis 2")
             shape = (tree.shape[0], num_pages, page_size) + tree.shape[3:]
-            return jnp.zeros(shape, tree.dtype)
+            return zeros_jit(shape, tree.dtype)
 
         self.cache = build(struct)
         self.ptab_h = np.zeros((slots, self.W), np.int32)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 page_update_cache, update_cache)
+                                 page_update_cache, update_cache, zeros_jit)
 
 
 def _init_attn(ks, d, n_heads_d, kv_heads_d, hd, n_layers, dt):
@@ -182,11 +182,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     F = cfg.frontend_len
     Ld = cfg.num_layers
     return {
-        "self_k": jnp.zeros((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
-        "self_v": jnp.zeros((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "self_k": zeros_jit((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "self_v": zeros_jit((Ld, batch, max_seq, cfg.num_kv_heads, hd), dtype),
         # cross-attention K/V computed once from encoder output at prefill
-        "cross_k": jnp.zeros((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
-        "cross_v": jnp.zeros((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
+        "cross_k": zeros_jit((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
+        "cross_v": zeros_jit((Ld, batch, F, cfg.num_kv_heads, hd), dtype),
     }
 
 
@@ -196,7 +196,7 @@ def prefill(params, cfg: ModelConfig, frames, tokens, cache,
     B, S = tokens.shape
     x = params["embed"][tokens]
     x = x + L.sinusoidal_pos(S, cfg.d_model, x.dtype)[None]
-    pos0 = jnp.zeros((B,), jnp.int32)
+    pos0 = zeros_jit((B,), jnp.int32)
     hd = cfg.resolved_head_dim
 
     def step(h, layer):

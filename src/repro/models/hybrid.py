@@ -10,7 +10,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import ssm, transformer
 from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
-                                 take_layer)
+                                 take_layer, zeros_jit)
 
 
 def n_attn_sites(cfg: ModelConfig) -> int:
@@ -90,8 +90,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     n_sites = n_attn_sites(cfg)
     return {
         "mamba": ssm.init_mamba_cache(cfg, batch, cfg.num_layers),
-        "attn_k": jnp.zeros((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
-        "attn_v": jnp.zeros((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "attn_k": zeros_jit((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
+        "attn_v": zeros_jit((n_sites, batch, max_seq, cfg.num_kv_heads, hd), dtype),
     }
 
 
@@ -135,7 +135,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX,
     x = params["embed"][tokens]
     x = ctx.shard(x, ("batch", "res_seq", "embed"))
     B, S = tokens.shape
-    pos0 = jnp.zeros((B,), jnp.int32)
+    pos0 = zeros_jit((B,), jnp.int32)
     x, new_cache = _run(params, cfg, x, cache, ctx, positions=jnp.arange(S),
                         cache_pos=pos0, kv_len=None, decode=False, ptab=ptab)
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)

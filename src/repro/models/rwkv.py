@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat)
+from repro.models.common import (Ctx, DEFAULT_CTX, layer_loop, maybe_remat,
+                                 zeros_jit)
 from repro.models.ssm import chunked_linear_attention, step_linear_attention
 
 DECAY_LORA = 64
@@ -47,7 +48,7 @@ def init_block_params(cfg: ModelConfig, key, n_layers: int) -> dict:
         "wA": w(ks[5], (d, lora), d).astype(jnp.float32),
         "wB": (jax.random.normal(ks[6], (n_layers, lora, d), jnp.float32)
                * 0.01),
-        "u": jnp.zeros((n_layers, H, Dh), jnp.float32),        # bonus
+        "u": zeros_jit((n_layers, H, Dh), jnp.float32),        # bonus
         "gn": jnp.ones((n_layers, d), dt),                     # per-head norm
         # channel mix
         "ck": w(ks[7], (d, cfg.d_ff), d),
@@ -155,9 +156,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0, dtype=jnp.bfloat1
     H, Dh = cfg.num_heads, cfg.resolved_head_dim
     L_, d = cfg.num_layers, cfg.d_model
     return {
-        "shift1": jnp.zeros((L_, batch, 1, d), dtype),
-        "shift2": jnp.zeros((L_, batch, 1, d), dtype),
-        "wkv": jnp.zeros((L_, batch, H, Dh, Dh), jnp.float32),
+        "shift1": zeros_jit((L_, batch, 1, d), dtype),
+        "shift2": zeros_jit((L_, batch, 1, d), dtype),
+        "wkv": zeros_jit((L_, batch, H, Dh, Dh), jnp.float32),
     }
 
 

@@ -25,6 +25,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.common import zeros_jit
+
 
 def chunked_linear_attention(q, k, v, log_decay, *, inclusive: bool,
                              u: Optional[jax.Array] = None, chunk: int = 64,
@@ -237,7 +239,7 @@ def init_mamba_cache(cfg, batch: int, n_layers: int):
     H = di // P
     conv_ch = di + 2 * N
     return {
-        "conv": jnp.zeros((n_layers, batch, cfg.ssm.conv_width - 1, conv_ch),
+        "conv": zeros_jit((n_layers, batch, cfg.ssm.conv_width - 1, conv_ch),
                           jnp.float32),
-        "ssm": jnp.zeros((n_layers, batch, H, N, P), jnp.float32),
+        "ssm": zeros_jit((n_layers, batch, H, N, P), jnp.float32),
     }

@@ -6,6 +6,7 @@ HLO stays O(1) in depth (essential for the 126-layer 405B dry-run).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -14,7 +15,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.common import (Ctx, DEFAULT_CTX, gather_pages, layer_loop,
-                                 maybe_remat, page_update_cache, update_cache)
+                                 maybe_remat, page_update_cache, update_cache,
+                                 zeros_jit)
 from repro.models.moe import init_moe_ffn, moe_ffn
 
 
@@ -225,7 +227,7 @@ def loss_fn(params, cfg: ModelConfig, batch, ctx: Ctx = DEFAULT_CTX):
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     hd = cfg.resolved_head_dim
     shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"k": zeros_jit(shape, dtype), "v": zeros_jit(shape, dtype)}
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache, ctx: Ctx = DEFAULT_CTX, *,

@@ -136,11 +136,11 @@ def test_flash_attention_vs_naive():
         want = naive(q, k, v, off)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
-        g1 = jax.grad(lambda *a: flash_attention(*a, chunk=7,
-                                                 q_offset=off).sum(),
+        g1 = jax.grad(lambda *a, off=off: flash_attention(*a, chunk=7,
+                                                          q_offset=off).sum(),
                       argnums=(0, 1, 2))(q, k, v)
-        g2 = jax.grad(lambda *a: naive(*a, off).sum(), argnums=(0, 1, 2))(
-            q, k, v)
-        for a, b in zip(g1, g2):
+        g2 = jax.grad(lambda *a, off=off: naive(*a, off).sum(),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2, strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-4, atol=1e-4)

@@ -140,7 +140,7 @@ def test_rotation_reduces_weight_outliers():
     blocks = dict(p["blocks"])
     wq = np.array(blocks["wq"], np.float32)
     wq[:, 3, :] *= 30.0
-    blocks["wq"] = jnp.asarray(wq)
+    blocks["wq"] = jnp.asarray(wq.copy())
     p = dict(p, blocks=blocks)
     rp = rotate_params(p, cfg, seed=0)
 

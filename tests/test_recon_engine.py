@@ -267,7 +267,8 @@ def test_soft_rate_trajectory_matches_schedule():
         n_soft = r * total
         assert n_soft == pytest.approx(int(total * sr[k]), abs=0.5), \
             f"iter {k}: {n_soft} soft vs target {int(total * sr[k])}"
-    assert all(a >= b for a, b in zip(realized, realized[1:]))
+    assert all(a >= b
+               for a, b in zip(realized, realized[1:], strict=False))
 
 
 def test_soft_rate_schedule_stretch_anchors_for_small_k():

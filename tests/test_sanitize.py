@@ -1,0 +1,134 @@
+"""repro.debug.sanitize: the runtime half of the repo contracts.
+
+``assert_no_recompiles`` must fire on the PR 4 bug class (a shape change
+re-tracing a hot jitted step) and stay quiet on cache hits;
+``sanitized(transfer_guard=True)`` must reject implicit host transfers
+while the scheduler decode loop and the recon engine run clean under it
+end to end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.debug.sanitize import (RecompileError, assert_no_recompiles,
+                                  sanitized)
+
+
+@pytest.fixture(scope="module")
+def sched_setup():
+    from repro.configs import get_reduced_config
+    from repro.models import get_model
+    cfg = get_reduced_config("smollm-135m")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# -- assert_no_recompiles ----------------------------------------------------
+
+def test_recompile_detector_fires_on_cache_buster():
+    f = jax.jit(lambda x: x * x)
+    f(jnp.ones((4,)))                       # warm at one shape
+    with pytest.raises(RecompileError, match="PR 4 bug class"):
+        with assert_no_recompiles(f):
+            f(jnp.ones((5,)))               # new shape -> new executable
+
+
+def test_recompile_detector_quiet_on_cache_hit():
+    f = jax.jit(lambda x: x + 1)  # reprolint: ok[jit-cache] — single-call test fn, rebuild is the fixture
+    f(jnp.ones((4,)))
+    with assert_no_recompiles(f):
+        for _ in range(3):
+            f(jnp.ones((4,)))
+
+
+def test_recompile_detector_allowed_budget():
+    f = jax.jit(lambda x: x - 1)
+    with assert_no_recompiles(f, allowed=1):
+        f(jnp.ones((4,)))                   # first trace is the budget
+    with pytest.raises(RecompileError):
+        with assert_no_recompiles(f, allowed=1):
+            f(jnp.ones((5,)))
+            f(jnp.ones((6,)))
+
+
+def test_recompile_detector_tolerates_plain_callables():
+    with assert_no_recompiles(lambda x: x):
+        pass
+
+
+# -- sanitized() -------------------------------------------------------------
+
+def test_transfer_guard_blocks_implicit_scalar_push():
+    # on the CPU backend the guard's teeth are on host->device: an eager op
+    # embedding a host scalar constant device_puts it implicitly per call
+    x = jnp.arange(4.0)
+    x.block_until_ready()
+    # XlaRuntimeError subclasses RuntimeError
+    with pytest.raises(RuntimeError, match="[Dd]isallow"):
+        with sanitized(transfer_guard=True, check_leaks=False):
+            (x * 2.5).block_until_ready()
+
+
+def test_transfer_guard_allows_explicit_transfers():
+    with sanitized(transfer_guard=True, check_leaks=False):
+        d = jax.device_put(np.arange(4, dtype=np.int32))
+        h = jax.device_get(d)
+    assert h.tolist() == [0, 1, 2, 3]
+
+
+def test_sanitized_restores_previous_config():
+    with sanitized(transfer_guard=True, check_leaks=False):
+        pass
+    (jnp.arange(4.0) * 2.5).block_until_ready()   # guard lifted again
+
+
+# -- the hot loops under the full stack --------------------------------------
+
+def test_sched_decode_clean_under_transfer_guard(sched_setup):
+    from repro.launch.scheduler import (Request, compile_sched_steps,
+                                        serve_scheduled)
+    cfg, model, params = sched_setup
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (6,))
+                              .astype(np.int32),
+                    max_new_tokens=4, arrival=0) for i in range(3)]
+    steps = compile_sched_steps(cfg, max_seq=16)
+    kw = dict(slots=2, max_seq=16, compiled=steps, collect_logits=False)
+    warm = serve_scheduled(cfg, params, list(reqs), **kw)
+    with sanitized(transfer_guard=True, check_leaks=False):
+        with assert_no_recompiles(steps.decode):
+            guarded = serve_scheduled(cfg, params, list(reqs), **kw)
+    for rid in warm.requests:
+        np.testing.assert_array_equal(warm.requests[rid]["tokens"],
+                                      guarded.requests[rid]["tokens"])
+
+
+def test_recon_engine_clean_under_transfer_guard():
+    import repro.core.quantizer as Q
+    import repro.core.tesseraq as TQ
+    from repro.core.quantizer import QuantConfig
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(32, 32)).astype(np.float32)
+    bp = {"w": jnp.asarray(W)}
+    X = rng.normal(size=(8, 4, 32)).astype(np.float32)
+    Y = (X @ W).astype(np.float32)
+    qcfg = QuantConfig(bits=2, group_size=16)
+    s, z = Q.compute_scale_zero(jnp.asarray(W), qcfg)
+    qmeta = {("w",): {"scale": s, "zero": z}}
+    tcfg = TQ.TesseraQConfig(par_iterations=2, steps_per_iteration=2,
+                             batch_size=4, engine="device")
+
+    def apply(p, x, aux=None):
+        return x @ p["w"]
+
+    cache = {}
+    TQ.reconstruct_block(apply, dict(bp), X, Y, None,
+                         {k: dict(v) for k, v in qmeta.items()},
+                         qcfg, tcfg, cache=cache)        # warm
+    with sanitized(transfer_guard=True, check_leaks=False):
+        TQ.reconstruct_block(apply, dict(bp), X, Y, None,
+                             {k: dict(v) for k, v in qmeta.items()},
+                             qcfg, tcfg, cache=cache)

@@ -49,7 +49,7 @@ def test_write_read_slot_roundtrip(dense):
     out = write_slot(cache, one, 2)
     back = read_slot(out, 2)
     for a, b in zip(jax.tree_util.tree_leaves(back),
-                    jax.tree_util.tree_leaves(one)):
+                    jax.tree_util.tree_leaves(one), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # the other slots stay untouched (zeros)
     for s in (0, 1, 3):

@@ -146,7 +146,7 @@ def test_adam_init_from_template_and_jitted_update():
     st_t = opt.init(tmpl)
     st_r = opt.init(p)
     for a, b in zip(jax.tree_util.tree_leaves(st_t),
-                    jax.tree_util.tree_leaves(st_r)):
+                    jax.tree_util.tree_leaves(st_r), strict=True):
         assert a.shape == b.shape and a.dtype == b.dtype
     abstract = opt.init_abstract(p)
     assert jax.tree_util.tree_structure(abstract) == \
@@ -156,7 +156,7 @@ def test_adam_init_from_template_and_jitted_update():
     p_e, st_e = opt.update(g, opt.init(p), p)
     p_j, st_j = opt.jitted_update(donate=True)(g, opt.init(p), p)
     for a, b in zip(jax.tree_util.tree_leaves(p_e),
-                    jax.tree_util.tree_leaves(p_j)):
+                    jax.tree_util.tree_leaves(p_j), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
     assert int(st_j.step) == int(st_e.step) == 1
 

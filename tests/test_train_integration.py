@@ -19,7 +19,7 @@ def trained():
                                       global_batch=8))
     params = harness.init_params(jax.random.PRNGKey(0))
     opt = harness.init_opt(params)
-    step_fn = jax.jit(harness.step_fn)
+    step_fn = jax.jit(harness.step_fn)   # reprolint: ok[jit-cache] — session-scoped fixture; compiled once
     losses = []
     for s in range(60):
         batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
@@ -35,7 +35,7 @@ def test_loss_decreases(trained):
 
 def test_resume_bit_exact(trained, tmp_path):
     cfg, harness, data, *_ = trained
-    step_fn = jax.jit(harness.step_fn)
+    step_fn = jax.jit(harness.step_fn)   # reprolint: ok[jit-cache] — compiled once per test, hits the fixture's trace
 
     def run(p, o, lo, hi):
         for s in range(lo, hi):
@@ -56,7 +56,7 @@ def test_resume_bit_exact(trained, tmp_path):
 
     fa = jax.tree_util.tree_leaves(p_a)
     fb = jax.tree_util.tree_leaves(p_b)
-    for a, b in zip(fa, fb):
+    for a, b in zip(fa, fb, strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-6, atol=1e-6)
@@ -74,7 +74,7 @@ def test_microbatching_matches_full_batch(trained):
     # losses agree (mean over microbatches == full-batch mean at equal sizes)
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 5e-3
     for a, b in zip(jax.tree_util.tree_leaves(p1),
-                    jax.tree_util.tree_leaves(p2)):
+                    jax.tree_util.tree_leaves(p2), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=5e-3)
 

@@ -1,0 +1,12 @@
+"""reprolint: repo-contract static analysis for the TesseraQ reproduction.
+
+``python -m tools.reprolint src tests`` runs the AST passes plus the
+registry-driven structural check; ``--hlo`` additionally lowers the sched
+decode and sharded recon steps and lints the compiled HLO.  See README
+"Static analysis & sanitizers" for the rule table and pragma syntax.
+"""
+from tools.reprolint.core import (FileContext, Violation, ast_rules,
+                                  lint_paths, lint_source)
+
+__all__ = ["FileContext", "Violation", "ast_rules", "lint_paths",
+           "lint_source"]

@@ -1,0 +1,70 @@
+"""CLI: ``python -m tools.reprolint [paths...] [--hlo] [--no-structural]``.
+
+Default paths are ``src tests``.  Exit status 0 means every AST pass, the
+registry/ParamSpec structural check and (with ``--hlo``) the compiled-HLO
+lint came back clean.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from tools.reprolint.core import ast_rules, iter_py_files, lint_paths
+
+
+def _ensure_src_on_path():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    src = os.path.join(root, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="tools.reprolint")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--no-structural", action="store_true",
+                    help="skip the registry/ParamSpec structural check "
+                         "(pure AST run, no jax import)")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also lower the sched decode + sharded recon "
+                         "steps and lint the compiled HLO")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for mod in ast_rules():
+            print(f"{mod.RULE}: {(mod.__doc__ or '').strip().splitlines()[0]}")
+        print("spec-conformance: registry vs reality, structurally.")
+        print("hlo-lint: compiled sched decode / sharded recon HLO "
+              "contracts (--hlo).")
+        return 0
+
+    paths = args.paths or ["src", "tests"]
+    violations = lint_paths(paths)
+
+    if not args.no_structural:
+        _ensure_src_on_path()
+        from tools.reprolint.spec_conformance import check_structural
+        violations.extend(check_structural())
+
+    if args.hlo:
+        _ensure_src_on_path()
+        from tools.reprolint.hlo_lint import check_hlo
+        violations.extend(check_hlo())
+
+    for v in violations:
+        print(v)
+    n_files = len(list(iter_py_files(paths)))
+    if violations:
+        print(f"reprolint: {len(violations)} violation(s) across "
+              f"{n_files} files")
+        return 1
+    print(f"reprolint: {n_files} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,228 @@
+"""Shared visitor infrastructure for the reprolint AST passes.
+
+Every rule module exposes ``RULE`` (the id pragmas refer to) and
+``check(ctx) -> list[Violation]``.  This module owns everything the rules
+share: parsing, parent links, dotted-name resolution, pragma collection
+(``# reprolint: ok[rule] — reason``) and the suppression logic.
+
+Pragma grammar (one per comment line)::
+
+    # reprolint: ok[rule-a,rule-b] — reason the violation is intentional
+    # reprolint: hot — mark this def/class a hot root for host-sync
+
+The reason is MANDATORY: an ``ok[...]`` pragma without one is itself a
+violation (rule id ``pragma``), so suppressions stay auditable.  A pragma
+on (or immediately above) a ``def``/``class`` line suppresses the named
+rules for the whole definition body; anywhere else it suppresses the same
+line and the line below it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+PRAGMA_RE = re.compile(
+    r"#\s*reprolint:\s*(?P<kind>ok\[(?P<rules>[\w\s,-]+)\]|hot)"
+    r"\s*(?:[-—:]+\s*(?P<reason>\S.*))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int
+    rules: Tuple[str, ...]      # () for a ``hot`` marker
+    hot: bool
+    reason: Optional[str]
+
+
+def parse_pragmas(src: str) -> List[Pragma]:
+    out = []
+    for i, text in enumerate(src.splitlines(), start=1):
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        if m.group("kind") == "hot":
+            out.append(Pragma(i, (), True, m.group("reason")))
+        else:
+            rules = tuple(r.strip() for r in m.group("rules").split(",")
+                          if r.strip())
+            out.append(Pragma(i, rules, False, m.group("reason")))
+    return out
+
+
+_DEF_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While)
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+
+class FileContext:
+    """One parsed file plus everything the rule passes need from it."""
+
+    def __init__(self, path: str, src: str):
+        self.path = path.replace(os.sep, "/")
+        self.src = src
+        self.tree = ast.parse(src)
+        self.pragmas = parse_pragmas(src)
+        self.hot_lines: Set[int] = {p.line for p in self.pragmas if p.hot}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._rl_parent = node  # type: ignore[attr-defined]
+
+    # -- tree navigation -----------------------------------------------------
+
+    def parent(self, node):
+        return getattr(node, "_rl_parent", None)
+
+    def ancestors(self, node):
+        node = self.parent(node)
+        while node is not None:
+            yield node
+            node = self.parent(node)
+
+    def enclosing_function(self, node):
+        """Nearest enclosing def (None at module/class scope)."""
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return a
+        return None
+
+    def in_loop(self, node, *, stop=None) -> bool:
+        """True when ``node`` sits under a for/while (or a comprehension),
+        walking no further out than ``stop``."""
+        for a in self.ancestors(node):
+            if a is stop:
+                return False
+            if isinstance(a, _LOOP_NODES + _COMPREHENSIONS):
+                return True
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and a is not stop:
+                # a nested def is a fresh (non-loop) scope
+                return False
+        return False
+
+    def module_defs(self) -> Dict[str, ast.AST]:
+        """Module-level def/class nodes by name."""
+        return {n.name: n for n in self.tree.body if isinstance(n, _DEF_NODES)}
+
+    # -- suppression ---------------------------------------------------------
+
+    def _def_spans(self) -> List[Tuple[int, int]]:
+        return [(n.lineno, n.end_lineno) for n in ast.walk(self.tree)
+                if isinstance(n, _DEF_NODES)]
+
+    def apply_pragmas(self, violations: List[Violation]) -> List[Violation]:
+        """Drop suppressed violations; add ``pragma`` violations for
+        ``ok[...]`` markers with no reason."""
+        spans = self._def_spans()
+        line_ok: Dict[int, Set[str]] = {}
+        span_ok: List[Tuple[int, int, Set[str]]] = []
+        out = list(violations)
+        for p in self.pragmas:
+            if p.hot:
+                continue
+            if not p.reason:
+                out.append(Violation(
+                    "pragma", self.path, p.line,
+                    "ok[...] pragma without a reason; append one after "
+                    "an em-dash, hyphen or colon"))
+                continue
+            rules = set(p.rules)
+            scoped = False
+            for lo, hi in spans:
+                if p.line in (lo, lo - 1):
+                    span_ok.append((lo, hi, rules))
+                    scoped = True
+            if not scoped:
+                line_ok.setdefault(p.line, set()).update(rules)
+                line_ok.setdefault(p.line + 1, set()).update(rules)
+
+        def suppressed(v: Violation) -> bool:
+            if v.rule == "pragma":
+                return False
+            if v.rule in line_ok.get(v.line, ()):
+                return True
+            return any(lo <= v.line <= hi and v.rule in rules
+                       for lo, hi, rules in span_ok)
+
+        seen = set()
+        kept = []
+        for v in out:
+            key = (v.rule, v.line, v.msg)
+            if key not in seen and not suppressed(v):
+                seen.add(key)
+                kept.append(v)
+        return kept
+
+
+def call_name(func: ast.AST) -> str:
+    """Dotted source name of a call target: ``jax.jit``, ``np.asarray``,
+    ``float`` — or '' for anything that is not a plain name chain."""
+    parts = []
+    while isinstance(func, ast.Attribute):
+        parts.append(func.attr)
+        func = func.value
+    if isinstance(func, ast.Name):
+        parts.append(func.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def name_refs(node: ast.AST) -> Set[str]:
+    """All plain ``Name`` identifiers loaded anywhere under ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# -- engine -------------------------------------------------------------------
+
+def ast_rules():
+    from tools.reprolint import (alias_push, donation, env_read, host_sync,
+                                 jit_cache, pallas_contract)
+    return (host_sync, jit_cache, env_read, donation, alias_push,
+            pallas_contract)
+
+
+def lint_source(src: str, path: str = "<string>",
+                rules=None) -> List[Violation]:
+    ctx = FileContext(path, src)
+    out: List[Violation] = []
+    for mod in (rules if rules is not None else ast_rules()):
+        out.extend(mod.check(ctx))
+    return sorted(ctx.apply_pragmas(out), key=lambda v: (v.line, v.rule))
+
+
+def lint_paths(paths, rules=None) -> List[Violation]:
+    out: List[Violation] = []
+    for path in iter_py_files(paths):
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        try:
+            out.extend(lint_source(src, path, rules))
+        except SyntaxError as e:  # pragma: no cover - repo parses
+            out.append(Violation("parse", path, e.lineno or 0, str(e)))
+    return out
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs
+                           if d not in ("__pycache__", ".git")]
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)

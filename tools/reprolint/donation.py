@@ -1,0 +1,72 @@
+"""Rule ``donation-guard``: ``donate_argnums`` must route through a guard.
+
+On the CPU backend XLA cannot alias most donated buffers; a bare literal
+``donate_argnums=(0, 1)`` floods logs with unusable-donation warnings and
+papers over the question of whether the aliasing is actually valid.  The
+repo's two blessed shapes:
+
+* a call to a ``*donate*``-named helper
+  (``steps.cache_donate_argnums`` — serve-path caches alias on every
+  backend; ``steps.train_donate_argnums`` — train buffers skip donation
+  on CPU);
+* the inline conditional ``(...) if donate else ()`` where ``donate`` was
+  derived from ``jax.default_backend()`` (the ``optim/adam.py`` pattern).
+
+Anything else is a bare, unguarded donation and gets flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.core import FileContext, Violation, call_name, name_refs
+
+RULE = "donation-guard"
+
+
+def _backed_by_default_backend(ctx: FileContext, test: ast.AST, site) -> bool:
+    if "default_backend" in ast.dump(test):
+        return True
+    fn = ctx.enclosing_function(site)
+    if fn is None:
+        return False
+    refs = name_refs(test)
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id in refs
+                        for t in n.targets) \
+                and "default_backend" in ast.dump(n.value):
+            return True
+        # guard threaded through a parameter default or an upstream
+        # ``donate = donate and jax.default_backend() != "cpu"`` rebind
+        if isinstance(n, ast.AugAssign) and isinstance(n.target, ast.Name) \
+                and n.target.id in refs \
+                and "default_backend" in ast.dump(n.value):
+            return True
+    return False
+
+
+def _ok_value(ctx: FileContext, value: ast.AST, site) -> bool:
+    if isinstance(value, ast.Call) and "donate" in call_name(value.func):
+        return True
+    if isinstance(value, ast.IfExp):
+        return _backed_by_default_backend(ctx, value.test, site)
+    if isinstance(value, ast.Tuple) and not value.elts:
+        return True         # explicit "no donation"
+    return False
+
+
+def check(ctx: FileContext):
+    out = []
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        for kw in n.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames") \
+                    and not _ok_value(ctx, kw.value, n):
+                out.append(Violation(
+                    RULE, ctx.path, kw.value.lineno,
+                    f"bare `{kw.arg}` without a CPU-safe guard; route it "
+                    f"through cache_donate_argnums/train_donate_argnums or "
+                    f"gate on jax.default_backend() (optim/adam.py "
+                    f"pattern)"))
+    return out

@@ -1,0 +1,40 @@
+"""Rule ``env-read``: module-scope ``os.environ`` access.
+
+The PR 3 bug class: a module-global read of ``REPRO_KERNEL_BACKEND``
+froze the kernel backend at first-import time, so setting the env var
+after import (tests, notebooks, CI matrices) silently did nothing.  Env
+vars must be read lazily — inside the function that consumes them — so
+the value is current at call time.  The one legitimate module-scope write
+(``launch/dryrun.py`` forcing ``XLA_FLAGS`` before jax import) carries an
+``ok[env-read]`` pragma.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.core import FileContext, Violation, call_name
+
+RULE = "env-read"
+
+
+def _is_env(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute):
+        return call_name(node) in ("os.environ", "environ")
+    if isinstance(node, ast.Call):
+        return call_name(node.func) in ("os.getenv", "getenv")
+    return False
+
+
+def check(ctx: FileContext):
+    out = []
+    seen_lines = set()
+    for n in ast.walk(ctx.tree):
+        if _is_env(n) and ctx.enclosing_function(n) is None \
+                and n.lineno not in seen_lines:
+            seen_lines.add(n.lineno)
+            out.append(Violation(
+                RULE, ctx.path, n.lineno,
+                "module-scope environment access freezes the value at "
+                "first import (PR 3 bug class); read it lazily inside the "
+                "consuming function"))
+    return out

@@ -1,0 +1,119 @@
+"""Compiled-artifact lint: lower the two hot programs and assert their
+optimized HLO honors the repo's transfer/collective contracts.
+
+Programs checked (both lowered from tiny reduced configs — lowering and
+compiling never executes them):
+
+  * the scheduler's jitted ``sched_decode_step`` — the body of the timed
+    decode loop.  Contract: ZERO host transfers (the static ``host-sync``
+    rule keeps the *python* loop clean; this pins the compiled side), and
+    no collectives at all when unsharded.
+  * the sharded ``ReconstructionEngine`` scanned step on a data-parallel
+    mesh.  Contract: zero host transfers, and the only collective kind is
+    the ONE fused ``all-gather`` of per-shard chunk partials
+    (``recon_engine.grad_fn``) — any all-reduce/all-to-all showing up means
+    the deterministic hierarchical reduction regressed to a backend-ordered
+    psum.
+
+Run via ``python -m tools.reprolint --hlo`` (the CI ``lint-contracts`` job
+does, under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+mesh contract is exercised at real DP width).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.reprolint.core import Violation
+
+_ANCHOR_SCHED = "src/repro/launch/steps.py"
+_ANCHOR_RECON = "src/repro/core/recon_engine.py"
+
+
+def _sched_decode_hlo():
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.launch.steps import make_sched_steps
+
+    cfg = get_reduced_config("smollm-135m").replace(dtype="float32")
+    model, _, decode = make_sched_steps(cfg, max_seq=32)
+    slots = 4
+
+    def abstract(tree):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    cache = abstract(jax.eval_shape(lambda: model.init_cache(slots, 32)))
+    i32 = jax.numpy.int32
+    tok = jax.ShapeDtypeStruct((slots,), i32)
+    pos = jax.ShapeDtypeStruct((slots,), i32)
+    active = jax.ShapeDtypeStruct((slots,), jax.numpy.bool_)
+    lowered = jax.jit(decode).lower(params, cache, tok, pos, active)
+    return lowered.compile().as_text()
+
+
+def _recon_sharded_hlo():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import recon_engine as RE
+
+    mesh = RE.resolve_mesh(None)          # data mesh over every device
+
+    def loss_fn(tr, frozen, xb, yb, auxb):
+        pred = xb @ tr["w"] + frozen["b"]
+        return jnp.mean(jnp.square(pred - yb))
+
+    eng = RE.ReconstructionEngine(
+        loss_fn, RE.SignSGD(lr=1e-2, total_steps=2), mesh=mesh)
+    tr = {"w": jnp.zeros((4, 4), jnp.float32)}
+    frozen = {"b": jnp.zeros((4,), jnp.float32)}
+    X = jnp.arange(16 * 4, dtype=jnp.float32).reshape(16, 4)
+    Y = jnp.ones((16, 4), jnp.float32)
+    plan = RE.stage_plan(X, Y, batch_size=8, total_steps=2, mesh=mesh)
+    st = eng.init(tr)
+    lowered = eng._run.lower(tr, st, frozen, plan.X, plan.Y, plan.aux,
+                             plan.index_plan)
+    return lowered.compile().as_text(), RE.dp_size(mesh)
+
+
+def check_hlo() -> List[Violation]:
+    """Returns a (possibly empty) violation list; import-time jax errors
+    propagate — the lint must not silently pass when it cannot lower."""
+    from repro.launch.hlo_stats import collective_op_counts, host_transfer_ops
+
+    out: List[Violation] = []
+
+    hlo = _sched_decode_hlo()
+    n = host_transfer_ops(hlo)
+    if n:
+        out.append(Violation(
+            "hlo-host-transfer", _ANCHOR_SCHED, 1,
+            f"sched_decode_step compiles with {n} host-transfer op(s); the "
+            f"timed decode loop must stay on device"))
+    colls = collective_op_counts(hlo)
+    if colls:
+        out.append(Violation(
+            "hlo-collective", _ANCHOR_SCHED, 1,
+            f"unsharded sched_decode_step emits collectives {colls}; "
+            f"expected none"))
+
+    hlo, dp = _recon_sharded_hlo()
+    n = host_transfer_ops(hlo)
+    if n:
+        out.append(Violation(
+            "hlo-host-transfer", _ANCHOR_RECON, 1,
+            f"sharded recon step compiles with {n} host-transfer op(s)"))
+    colls = collective_op_counts(hlo)
+    extra = {k: v for k, v in colls.items() if k != "all-gather"}
+    if extra:
+        out.append(Violation(
+            "hlo-collective", _ANCHOR_RECON, 1,
+            f"sharded recon step emits uncontracted collectives {extra}; "
+            f"the gradient exchange contract is ONE fused all-gather"))
+    if dp > 1 and colls.get("all-gather", 0) != 1:
+        out.append(Violation(
+            "hlo-collective", _ANCHOR_RECON, 1,
+            f"sharded recon step (DP={dp}) emits "
+            f"{colls.get('all-gather', 0)} all-gather op(s) in the scanned "
+            f"body; the contract is exactly 1 fused exchange per step"))
+    return out

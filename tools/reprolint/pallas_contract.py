@@ -1,0 +1,219 @@
+"""Rule ``pallas-contract``: Pallas kernel wrapper contract checks.
+
+Three structural checks per ``pl.pallas_call`` wrapper function:
+
+1. **Grid divisibility** — every ``A // B`` inside a ``grid=`` expression,
+   a ``BlockSpec`` shape, or an index_map lambda assumes ``B`` divides the
+   operand; the wrapper must carry a matching runtime guard (an ``A % B``
+   check in an assert/raise) for that divisor.  Silent flooring drops
+   tail elements (the wrong-answer failure mode, not a crash).
+2. **VMEM residency** — when every dimension of the BlockSpec shapes
+   resolves statically (literals or literal defaults), the per-step block
+   working set is estimated at f32 width against
+   ``config.VMEM_BUDGET_BYTES``; oversized tiles fail at kernel-launch
+   time on real TPUs, long after CI's interpret-mode runs passed.
+3. **Scalar prefetch arity** — with
+   ``PrefetchScalarGridSpec(num_scalar_prefetch=K)`` the kernel body must
+   accept ``K + len(in_specs) + n_out (+ scratch)`` refs; a miscount
+   shifts every operand by one position.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.config import VMEM_BUDGET_BYTES, VMEM_BYTES_PER_ELEM
+from tools.reprolint.core import FileContext, Violation, call_name
+
+RULE = "pallas-contract"
+
+
+def _last(name: str) -> str:
+    return name.split(".")[-1]
+
+
+def _expr_key(node: ast.AST):
+    """Stable key for a divisor/operand expression (name chain or const)."""
+    if isinstance(node, ast.Constant):
+        return repr(node.value)
+    name = ""
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        name = call_name(node)
+    return name or None
+
+
+def _floordivs(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.FloorDiv):
+            key = _expr_key(n.right)
+            if key is not None and not (isinstance(n.right, ast.Constant)
+                                        and n.right.value in (1,)):
+                yield n, key
+
+
+def _guarded_divisors(fn: ast.AST):
+    out = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+            key = _expr_key(n.right)
+            if key is not None:
+                out.add(key)
+    return out
+
+
+def _static_env(fn: ast.AST):
+    env = {}
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults,
+                    strict=True):
+        if isinstance(d, ast.Constant) and isinstance(d.value, int):
+            env[a.arg] = d.value
+    for a, d in zip(args.kwonlyargs, args.kw_defaults, strict=True):
+        if isinstance(d, ast.Constant) and isinstance(d.value, int):
+            env[a.arg] = d.value
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                and isinstance(n.targets[0], ast.Name) \
+                and isinstance(n.value, ast.Constant) \
+                and isinstance(n.value.value, int):
+            env[n.targets[0].id] = n.value.value
+    return env
+
+
+def _resolve(node: ast.AST, env) -> int:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name) and node.id in env:
+        return env[node.id]
+    if isinstance(node, ast.BinOp):
+        left = _resolve(node.left, env)
+        right = _resolve(node.right, env)
+        if left is None or right is None:
+            return None
+        if isinstance(node.op, ast.FloorDiv) and right:
+            return left // right
+        if isinstance(node.op, ast.Mult):
+            return left * right
+        if isinstance(node.op, ast.Add):
+            return left + right
+    return None
+
+
+def _block_specs(call: ast.Call):
+    """Every pl.BlockSpec(...) constructed under ``call``."""
+    return [n for n in ast.walk(call)
+            if isinstance(n, ast.Call) and _last(call_name(n.func)) ==
+            "BlockSpec"]
+
+
+def _kernel_param_count(ctx: FileContext, fn, kernel_expr):
+    """Positional-ref count of the kernel callable, or None when it can't
+    be resolved statically (e.g. a functools.partial over runtime args)."""
+    target = kernel_expr
+    extra = 0
+    if isinstance(target, ast.Call) and _last(call_name(target.func)) == \
+            "partial":
+        if not target.args:
+            return None
+        extra = -(len(target.args) - 1)   # partial pre-binds positionals
+        target = target.args[0]
+    if not isinstance(target, (ast.Name, ast.Attribute)):
+        return None
+    name = _last(call_name(target))
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and n.name == name:
+            a = n.args
+            return len(a.posonlyargs) + len(a.args) + extra
+    return None
+
+
+def check(ctx: FileContext):
+    if "pallas_call" not in ctx.src:
+        return []
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                 and _last(call_name(n.func)) == "pallas_call"
+                 and ctx.enclosing_function(n) is fn]
+        if not calls:
+            continue
+        guarded = _guarded_divisors(fn)
+        env = _static_env(fn)
+        for call in calls:
+            grid_exprs = [kw.value for kw in call.keywords
+                          if kw.arg in ("grid", "grid_spec")]
+            for gs in ast.walk(call):
+                if isinstance(gs, ast.Call) and _last(call_name(gs.func)) \
+                        == "PrefetchScalarGridSpec":
+                    grid_exprs.append(gs)
+            spec_nodes = _block_specs(call)
+            # 1. divisibility: every floordiv in grid/BlockSpec/index_map
+            #    needs a runtime `% divisor` guard in this wrapper
+            for region in grid_exprs + spec_nodes:
+                for node, key in _floordivs(region):
+                    if key not in guarded:
+                        out.append(Violation(
+                            RULE, ctx.path, node.lineno,
+                            f"grid/BlockSpec floordiv assumes "
+                            f"`{ast.unparse(node)}` is exact but "
+                            f"`{fn.name}` never guards `% "
+                            f"{ast.unparse(node.right)}`; add an assert/"
+                            f"raise so ragged shapes fail loudly instead "
+                            f"of silently flooring"))
+            # 2. VMEM residency of statically-resolvable block shapes
+            total = 0
+            resolved_any = False
+            for spec in spec_nodes:
+                if not spec.args or not isinstance(spec.args[0], ast.Tuple):
+                    continue
+                dims = [_resolve(e, env) for e in spec.args[0].elts]
+                if all(d is not None for d in dims):
+                    resolved_any = True
+                    prod = 1
+                    for d in dims:
+                        prod *= d
+                    total += prod * VMEM_BYTES_PER_ELEM
+            if resolved_any and total > VMEM_BUDGET_BYTES:
+                out.append(Violation(
+                    RULE, ctx.path, call.lineno,
+                    f"block operands of this pallas_call need ~{total} "
+                    f"bytes of VMEM (> budget {VMEM_BUDGET_BYTES}); "
+                    f"shrink the tile shapes"))
+            # 3. scalar-prefetch operand arity
+            for gs in ast.walk(call):
+                if not (isinstance(gs, ast.Call)
+                        and _last(call_name(gs.func)) ==
+                        "PrefetchScalarGridSpec"):
+                    continue
+                num = next((kw.value.value for kw in gs.keywords
+                            if kw.arg == "num_scalar_prefetch"
+                            and isinstance(kw.value, ast.Constant)), None)
+                if num is None:
+                    continue
+                n_in = next((len(kw.value.elts) for kw in gs.keywords
+                             if kw.arg == "in_specs"
+                             and isinstance(kw.value, (ast.List, ast.Tuple))),
+                            None)
+                out_kw = next((kw.value for kw in call.keywords
+                               if kw.arg == "out_shape"), None)
+                n_out = (len(out_kw.elts)
+                         if isinstance(out_kw, (ast.List, ast.Tuple)) else 1)
+                n_scr = next((len(kw.value.elts) for kw in gs.keywords
+                              if kw.arg == "scratch_shapes"
+                              and isinstance(kw.value,
+                                             (ast.List, ast.Tuple))), 0)
+                kernel = call.args[0] if call.args else None
+                count = (None if kernel is None or n_in is None
+                         else _kernel_param_count(ctx, fn, kernel))
+                if count is not None \
+                        and count != num + n_in + n_out + n_scr:
+                    out.append(Violation(
+                        RULE, ctx.path, call.lineno,
+                        f"scalar-prefetch arity mismatch: kernel takes "
+                        f"{count} refs but num_scalar_prefetch={num} + "
+                        f"{n_in} inputs + {n_out} outputs + {n_scr} "
+                        f"scratch = {num + n_in + n_out + n_scr}"))
+    return out

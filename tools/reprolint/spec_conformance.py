@@ -1,0 +1,128 @@
+"""Rule ``spec-conformance``: registry vs reality, structurally.
+
+Adding a model family (or renaming a cache leaf) must not silently drift
+from the contracts the serving stack keys on:
+
+* every family's declared :class:`CacheSpec` leaves must match the leaf
+  paths its actual ``init_cache`` pytree produces, and each ``token``
+  leaf must carry the per-token extent on its declared ``token_axis``
+  (this is what the paged :class:`CacheStore` pages on);
+* every ``launch/sharding.py::PARAM_RULES`` entry must correspond to a
+  real leaf name in at least one family's params (stale rules are dead
+  placement contracts), and ``ParamSpec.block_specs`` must walk every
+  family's first block cleanly;
+* every quantizable projection leaf (``blocks.QUANT_LEAF_NAMES``, the
+  leaves the reconstruction engine shards) must have a ``PARAM_RULES``
+  placement.
+
+Runs under ``jax.eval_shape`` — no arrays are materialized, so the whole
+check is import-plus-trace cheap and safe for a lint job.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.reprolint.core import Violation
+
+RULE = "spec-conformance"
+
+_REGISTRY = "src/repro/models/registry.py"
+_SHARDING = "src/repro/launch/sharding.py"
+
+
+def _leaf_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _leaf_paths(v, prefix + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _leaf_paths(v, prefix + (str(i),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _family_reps():
+    from repro.configs import ARCH_IDS, get_reduced_config
+    reps = {}
+    for arch in ARCH_IDS:
+        cfg = get_reduced_config(arch)
+        reps.setdefault(cfg.family, (arch, cfg))
+    return reps
+
+
+def check_structural() -> List[Violation]:
+    import jax
+
+    from repro.core.blocks import QUANT_LEAF_NAMES
+    from repro.launch.sharding import PARAM_RULES, ParamSpec
+    from repro.models import get_model
+    from repro.models.common import LEAF_TOKEN
+    from repro.models.registry import CACHE_SPECS
+
+    out: List[Violation] = []
+    max_seq, batch = 16, 2
+    seen_leaf_names = set()
+    for family, (arch, cfg) in sorted(_family_reps().items()):
+        spec = CACHE_SPECS.get(family)
+        if spec is None:
+            out.append(Violation(RULE, _REGISTRY, 1,
+                                 f"family `{family}` has no CacheSpec"))
+            continue
+        model = get_model(cfg)
+        cache = jax.eval_shape(
+            lambda m=model: m.init_cache(batch, max_seq))
+        actual = dict(_leaf_paths(cache))
+        declared = {name: leaf for name, leaf in spec.leaves}
+        if set(actual) != set(declared):
+            out.append(Violation(
+                RULE, _REGISTRY, 1,
+                f"family `{family}` ({arch}): CacheSpec leaves "
+                f"{sorted(declared)} != init_cache leaves "
+                f"{sorted(actual)}"))
+            continue
+        for name, leaf in declared.items():
+            if leaf.kind == LEAF_TOKEN:
+                axis = leaf.token_axis
+                shape = actual[name].shape
+                if len(shape) <= axis or shape[axis] != max_seq:
+                    out.append(Violation(
+                        RULE, _REGISTRY, 1,
+                        f"family `{family}` ({arch}): token leaf "
+                        f"`{name}` declares token_axis={axis} but "
+                        f"init_cache(batch, max_seq={max_seq}) produced "
+                        f"shape {shape}"))
+
+        params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        blocks = params.get("blocks") if isinstance(params, dict) else None
+        if isinstance(blocks, (list, tuple)) and blocks:
+            first_block = blocks[0]
+        else:
+            first_block = blocks if isinstance(blocks, dict) else params
+        leaf_names = {p.split("/")[-1] for p, _ in _leaf_paths(params)}
+        seen_leaf_names |= leaf_names
+        for path, leaf in _leaf_paths(first_block):
+            name = path.split("/")[-1]
+            if name in QUANT_LEAF_NAMES and getattr(leaf, "ndim", 0) >= 2 \
+                    and name not in PARAM_RULES:
+                out.append(Violation(
+                    RULE, _SHARDING, 1,
+                    f"family `{family}` ({arch}): quantizable leaf "
+                    f"`{name}` has no PARAM_RULES placement — the TP "
+                    f"engine would silently replicate it"))
+        # the ParamSpec walk itself must not choke on any family's block
+        if isinstance(first_block, dict):
+            try:
+                ParamSpec(None, None, 1).block_specs(first_block)
+            except Exception as e:  # pragma: no cover - drift guard
+                out.append(Violation(
+                    RULE, _SHARDING, 1,
+                    f"family `{family}` ({arch}): ParamSpec.block_specs "
+                    f"failed on the first block: {e!r}"))
+
+    stale = set(PARAM_RULES) - seen_leaf_names
+    if stale:
+        out.append(Violation(
+            RULE, _SHARDING, 1,
+            f"stale PARAM_RULES entr{'y' if len(stale) == 1 else 'ies'} "
+            f"{sorted(stale)}: no family's params contain such a leaf"))
+    return out
