@@ -4,7 +4,7 @@ export PYTHONPATH
 
 .PHONY: test test-slow test-multidevice lint lint-contracts sanitize-smoke \
 	bench-smoke bench bench-serve bench-serve-smoke bench-paged-smoke \
-	eval eval-smoke
+	bench-serve-tp-smoke eval eval-smoke
 
 # tier-1: fast suite, slow-marked tests deselected (pyproject addopts)
 test:
@@ -63,6 +63,15 @@ bench-serve-smoke:
 # full CI serve-smoke leg runs the same section inside bench-serve-smoke
 bench-paged-smoke:
 	$(PY) -m benchmarks.serve_speed --smoke --paged-only --json BENCH_paged.json
+
+# tensor-parallel serving section only, on a fake 8-device host platform
+# (2x4 mesh): tp_serve_parity (tokens bit-identical to the no-mesh path,
+# logits within the psum tolerance) and tp_serve_decode_vs_single goodput
+# gates; emits BENCH_serve_tp.json (audited by the CI multidevice leg)
+bench-serve-tp-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m benchmarks.serve_speed --smoke --tp 4 --tp-only \
+		--json BENCH_serve_tp.json
 
 # one-command quality harness: FP vs RTN/AWQ/TesseraQ perplexity + choice
 # accuracy + packed-model eval + xla/pallas logits-parity gate; emits

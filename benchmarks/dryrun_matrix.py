@@ -55,13 +55,68 @@ def run_one(arch, shape, mesh, quant="", **kw):
     return res
 
 
+def run_tp_serve_cell(tp: int = 4, n_devices: int = 8):
+    """TP serving sanitizer cell: the shard-mapped decode loop end to end
+    under ``sanitized(transfer_guard=True)`` — same exemption rules as the
+    recon mesh path (explicit ``device_put`` placements are allowed, any
+    implicit dispatch-time reshard of params/cache trips the guard).
+
+    The roofline cells above only LOWER the TP decode step (AOT); this cell
+    actually runs it on a ``serve_mesh(tp=...)`` submesh of the fake-device
+    host so the matrix also proves the serving path executes guard-clean.
+    """
+    import numpy as np
+    from benchmarks.common import SANITIZER, calib_batches, run_sanitized
+    from repro.configs import get_reduced_config
+    from repro.core import pack_model, quantize_model
+    from repro.launch.mesh import serve_mesh
+    from repro.launch.serve import parse_quant, serve_requests
+    from repro.models import get_model
+
+    path = os.path.join(ART, f"tp_serve_sanitize__tp{tp}.json")
+    cfg = get_reduced_config("llama2-7b").replace(dtype="float32")
+    model = get_model(cfg)
+    import jax
+    params = model.init_params(jax.random.PRNGKey(0))
+    qcfg = parse_quant("W4A16g16")
+    pq, qmeta, _ = quantize_model(cfg, params, calib_batches(cfg), qcfg,
+                                  method="none", init="rtn")
+    packed = pack_model(cfg, pq, qmeta, qcfg)
+    mesh = serve_mesh(tp=tp, n_devices=n_devices)
+    prompts = np.random.RandomState(0).randint(
+        1, cfg.vocab_size, size=(2, 8)).astype(np.int32)
+    t0 = time.time()
+    # warm compile outside the guard (compilation device_puts constants);
+    # the guarded run below must then dispatch with zero implicit transfers
+    serve_requests(cfg, model, packed, prompts, gen=4,
+                   mesh=mesh, tp_shard=True)
+    run_sanitized(lambda: serve_requests(cfg, model, packed, prompts,
+                                         gen=4, mesh=mesh, tp_shard=True))
+    res = {"cell": "tp_serve_sanitize", "tp": tp, "mesh": str(mesh),
+           "quant": "W4A16g16",
+           "status": "ok" if SANITIZER["clean"] else "error",
+           "sanitizer_clean": SANITIZER["clean"],
+           "why": SANITIZER["why"], "wall_secs": time.time() - t0}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    print(f"[{res['status']:7s}] tp_serve_sanitize tp={tp} "
+          f"sanitizer_clean={res['sanitizer_clean']} "
+          f"({res['wall_secs']:.0f}s) {res['why'][:90]}")
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", default="")
     ap.add_argument("--quick", action="store_true",
                     help="single mesh only, no quantized variants")
+    ap.add_argument("--tp-serve-only", action="store_true",
+                    help="run only the TP serving sanitizer cell")
     args = ap.parse_args(argv)
     os.makedirs(ART, exist_ok=True)
+
+    if args.tp_serve_only:
+        return 0 if run_tp_serve_cell()["sanitizer_clean"] else 1
 
     from repro.configs import ARCH_IDS, SHAPES
     archs = (args.archs.split(",") if args.archs
@@ -81,6 +136,8 @@ def main(argv=None):
                 run_one(arch, shape.name, "single", "W2A16g128")
             if shape.kind == "prefill":
                 run_one(arch, shape.name, "single", "W4A4")
+    if not args.quick:
+        run_tp_serve_cell()
     return 0
 
 

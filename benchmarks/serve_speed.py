@@ -50,6 +50,20 @@ tokens (gates ``paged_vs_dense_goodput``, ``paged_cache_bytes``,
 ``paged_vs_dense_identity_xla``).  ``--paged-only`` runs just this sweep
 (the ``make bench-paged-smoke`` loop).
 
+A **tensor-parallel serving** section (``--tp N``, ``--tp-only`` for the
+CI multidevice leg / ``make bench-serve-tp-smoke``) serves packed W4A16g16
+weights through the ServeSpec sharding contract on
+``launch.mesh.serve_mesh(tp=N)`` and lands two gates:
+
+  * ``tp_serve_parity == 1.0`` — every TP-served request's tokens are
+    bit-identical to the no-mesh single-device serve, and the logits stay
+    within the documented psum tolerance (the in-channel all-reduce
+    reassociates the K reduction — the contract's one numerical seam);
+  * ``tp_serve_decode_vs_single >= 1.0`` — TP batched decode goodput must
+    beat serving the same requests one at a time through the same TP
+    steps (continuous batching must survive the shard_map wrapping; a
+    contract that forces per-request dispatch would show up here).
+
 Everything lands in a machine-readable JSON artifact (``--json``, default
 ``BENCH_serve.json``) that CI archives per run — the serving-perf
 trajectory later PRs (kv-cache quant, speculative decode) bench against.
@@ -278,6 +292,111 @@ def bench_paged(out, cfg, model, params, *, smoke: bool) -> bool:
     return ok
 
 
+# the TP section's arch: reduced llama2-7b has num_heads == num_kv_heads
+# == 4, so the attention group genuinely shards at tp=4, and W4A16g16
+# gives the reduced d_model (64 -> ng=4) whole quant groups per shard
+# while the FFN (d_ff=176 -> ng=11) exercises the replicated fallback
+TP_ARCH = "llama2-7b"
+TP_QUANT = "W4A16g16"
+
+
+def bench_tp(out, *, tp: int, smoke: bool, repeats: int) -> bool:
+    """Tensor-parallel uniform serving vs the no-mesh path: token/logits
+    parity (``tp_serve_parity``) and batched-vs-single-request decode
+    goodput through the SAME TP steps (``tp_serve_decode_vs_single``)."""
+    from repro.launch.mesh import serve_mesh
+
+    from benchmarks.common import calib_batches, trained_model
+
+    B = 4 if smoke else 8
+    S = 16 if smoke else 32
+    gen = 8 if smoke else 16
+    # TRAINED weights (cached under artifacts/), not random init: greedy
+    # decode on a random-init model rides near-tie argmax margins, and the
+    # psum reassociation noise (~1e-4) would flip tokens — the parity gate
+    # must measure the contract, not initializer luck.  float32 for the
+    # same reason as bench_config: crisp tolerance accounting.
+    cfg, params = trained_model(
+        get_reduced_config(TP_ARCH).replace(dtype="float32"),
+        tag="tp_serve_lm")
+    model = get_model(cfg)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=S,
+                          global_batch=B, seed=3)
+    prompts = SyntheticCorpus(data_cfg).batch(0)["tokens"][:, :S]
+    qcfg = parse_quant(TP_QUANT)
+    pq, qmeta, _ = quantize_model(cfg, params, calib_batches(cfg), qcfg,
+                                  method="none", init="rtn")
+    packed = pack_model(cfg, pq, qmeta, qcfg)
+
+    mesh = serve_mesh(tp=tp)
+    base = compile_serve_steps(cfg, kernel_backend="xla")
+    tpc = compile_serve_steps(cfg, kernel_backend="xla", mesh=mesh,
+                              tp_shard=True)
+
+    # parity: tokens bit-identical, logits within the psum tolerance (the
+    # in-channel all-reduce reassociates the K reduction; everything else
+    # in the contract is a pure layout change)
+    ref = serve_requests(cfg, model, packed, prompts, gen=gen, compiled=base)
+    got = serve_requests(cfg, model, packed, prompts, gen=gen, compiled=tpc,
+                         mesh=mesh, tp_shard=True)
+    matches = sum(
+        int(np.array_equal(ref.requests[b]["tokens"],
+                           got.requests[b]["tokens"])) for b in range(B))
+    for b in range(B):
+        if not np.array_equal(ref.requests[b]["tokens"],
+                              got.requests[b]["tokens"]):
+            print(f"  tp parity MISMATCH req={b}: single "
+                  f"{ref.requests[b]['tokens'].tolist()} vs tp "
+                  f"{got.requests[b]['tokens'].tolist()}")
+    lg = parity_gate(ref["logits"], got["logits"], atol=5e-3, rtol=5e-3)
+    out["checks"]["tp_serve_logits"] = lg
+    ok = _gate(out, "tp_serve_parity", threshold=1.0,
+               measured=(matches / B) if lg["ok"] else 0.0,
+               ok=matches == B and lg["ok"], cmp=">=")
+
+    # goodput: batched TP decode vs the same requests served one at a time
+    # through the SAME compiled TP steps (single-request serving reuses one
+    # compiled (1, S) pair; warmed off the clock like every other section)
+    serve_requests(cfg, model, packed, prompts[0:1], gen=gen,
+                   compiled=tpc, mesh=mesh, tp_shard=True,
+                   collect_logits=False)                 # warm (1, S) pair
+    best_b = best_s = None
+    gc_was_on = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(repeats):
+            r = run_sanitized(lambda: serve_requests(
+                cfg, model, packed, prompts, gen=gen, compiled=tpc,
+                mesh=mesh, tp_shard=True, collect_logits=False))
+            best_b = _fold_best(best_b, r)
+            secs = 0.0
+            for b in range(B):
+                r1 = run_sanitized(lambda b=b: serve_requests(
+                    cfg, model, packed, prompts[b:b + 1], gen=gen,
+                    compiled=tpc, mesh=mesh, tp_shard=True,
+                    collect_logits=False))
+                secs += r1.decode_secs
+            tok_s = B * (gen - 1) / max(secs, 1e-9)
+            if best_s is None or tok_s > best_s:
+                best_s = tok_s
+    finally:
+        if gc_was_on:
+            gc.enable()
+
+    ratio = best_b["decode_tok_s"] / max(best_s, 1e-9)
+    out["rows"][f"tp{tp}_{TP_QUANT}_xla"] = {
+        "arch": cfg.name, "tp": tp, "requests": B, "prompt_len": S,
+        "gen": gen, "decode_tok_s": best_b["decode_tok_s"],
+        "single_request_decode_tok_s": best_s,
+        "no_mesh_decode_tok_s": ref.decode_tok_s, "backend": "xla"}
+    emit("serve_speed", f"tp{tp}_{TP_QUANT}_xla", "decode_tok_s",
+         f"{best_b['decode_tok_s']:.1f}", best_b["decode_secs"] * 1e6)
+    ok &= _gate(out, "tp_serve_decode_vs_single", threshold=1.0,
+                measured=ratio, ok=ratio >= 1.0, cmp=">=")
+    return ok
+
+
 def weight_memory(params) -> dict:
     """Deployed weight bytes: packed QTensors at container+metadata cost,
     everything else at its array size."""
@@ -369,6 +488,13 @@ def main(argv=None):
     ap.add_argument("--paged-only", action="store_true",
                     help="run only the paged-vs-dense sweep (quick local "
                          "loop; `make bench-paged-smoke`)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="also run the tensor-parallel serving section on "
+                         "launch.mesh.serve_mesh(tp=N) (needs N | device "
+                         "count; the CI leg forces 8 host devices)")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="run only the TP serving section (the multidevice "
+                         "CI leg; `make bench-serve-tp-smoke`)")
     ap.add_argument("--json", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -392,8 +518,15 @@ def main(argv=None):
            "prompt_len": S, "gen": gen, "backend_device":
            jax.default_backend(), "rows": {}, "checks": {}, "gates": []}
 
-    if args.paged_only:
-        ok = bench_paged(out, cfg, model, params, smoke=args.smoke)
+    if args.tp_only and args.tp is None:
+        raise SystemExit("--tp-only needs --tp N")
+
+    if args.paged_only or args.tp_only:
+        if args.paged_only:
+            ok = bench_paged(out, cfg, model, params, smoke=args.smoke)
+        else:
+            ok = bench_tp(out, tp=args.tp, smoke=args.smoke,
+                          repeats=repeats)
         ok &= sanitizer_gate(out)
         if args.json:
             with open(args.json, "w") as f:
@@ -490,6 +623,11 @@ def main(argv=None):
 
     # ---- paged store vs dense store (long-tailed Poisson sweep) ------------
     ok_all &= bench_paged(out, cfg, model, params, smoke=args.smoke)
+
+    # ---- tensor-parallel serving (ServeSpec contract) ----------------------
+    if args.tp is not None:
+        ok_all &= bench_tp(out, tp=args.tp, smoke=args.smoke,
+                           repeats=repeats)
 
     # every timed section above ran under the transfer guard
     ok_all &= sanitizer_gate(out)

@@ -14,7 +14,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # values packed per uint8 container byte
 PACK_FACTOR = {2: 4, 3: 2, 4: 2, 8: 1}
@@ -77,11 +76,30 @@ class QTensor:
         scale/zero pair really costs 4 bytes each in HBM, not the 2 a bf16
         deployment would (at group_size=32 that is ~19% of a W2 artifact,
         so pretending bf16 materially under-reports Table 8's WM column).
-        Leading batch dims (stacked layers / experts) are included."""
-        n = int(np.prod(self.packed.shape[:-2])) * int(np.prod(self.shape))
-        meta = (self.scale.size * self.scale.dtype.itemsize
-                + self.zero.size * self.zero.dtype.itemsize)
-        return n * CONTAINER_BITS[self.bits] // 8 + meta
+        Leading batch dims (stacked layers / experts) are included.
+
+        Under tensor-parallel serving the arrays are sharded; this reports
+        the PER-SHARD (addressable) bytes — what one device actually holds
+        — not the global total.  ``packed`` container bytes equal its
+        element count exactly (CONTAINER_BITS/8 == 1/pack factor for every
+        supported bit-width), so shard-local element counts are the whole
+        story for codes and metadata alike."""
+        def local_elems(arr) -> int:
+            shape = tuple(arr.shape)
+            sharding = getattr(arr, "sharding", None)
+            if sharding is not None:
+                try:
+                    shape = sharding.shard_shape(shape)
+                except (TypeError, ValueError, AttributeError):
+                    pass  # abstract values / ShapeDtypeStruct: global shape
+            n = 1
+            for d in shape:
+                n *= int(d)
+            return n
+
+        meta = (local_elems(self.scale) * self.scale.dtype.itemsize
+                + local_elems(self.zero) * self.zero.dtype.itemsize)
+        return local_elems(self.packed) + meta
 
     def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
         """Returns (*batch_dims, in_features, out_features).

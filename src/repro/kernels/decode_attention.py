@@ -148,7 +148,12 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     W = ptab.shape[1]
     if k_pool.shape != (P, psz, Hkv, D) or v_pool.shape != (P, psz, Hkv, D):
         raise ValueError(f"pool layout mismatch: q {q.shape} vs "
-                         f"k {k_pool.shape} / v {v_pool.shape}")
+                         f"k {k_pool.shape} / v {v_pool.shape}; under "
+                         "tensor-parallel serving Hkv is the SHARD-local "
+                         "KV-head count — the pools shard over heads with "
+                         "q while the page table stays replicated, so a "
+                         "mismatch means the cache specs and the param "
+                         "plan disagree (launch.sharding.ServeSpec)")
     if ptab.shape != (B, W):
         raise ValueError(f"ptab {ptab.shape} is not (B={B}, W)")
     scale = float(D) ** -0.5 if scale is None else scale
@@ -205,7 +210,11 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     S = k.shape[1]
     if k.shape != (B, S, Hkv, D) or v.shape != (B, S, Hkv, D):
         raise ValueError(f"cache-lane layout mismatch: q {q.shape} vs "
-                         f"k {k.shape} / v {v.shape}")
+                         f"k {k.shape} / v {v.shape}; under tensor-parallel "
+                         "serving Hkv is the SHARD-local KV-head count — "
+                         "cache lanes shard over heads with q, so a "
+                         "mismatch means the cache specs and the param "
+                         "plan disagree (launch.sharding.ServeSpec)")
     scale = float(D) ** -0.5 if scale is None else scale
     csz = min(chunk, S)
     nc = pl.cdiv(S, csz)

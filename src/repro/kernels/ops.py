@@ -97,7 +97,11 @@ def _snap_block_k(block_k, K, group_size, ppb, bits):
     Kp = K + (-K) % align
     if Kp % ppb:
         raise ValueError(f"padded K={Kp} not divisible by the bit-packing "
-                         f"factor {ppb} (bits={bits})")
+                         f"factor {ppb} (bits={bits}); under tensor-parallel "
+                         "serving K is the SHARD-local reduction dim — an "
+                         "in-channel split must hand every shard whole "
+                         "packed rows (launch.sharding.serve_plan only "
+                         "shards when (K/ppb) % tp == 0)")
     return bk, Kp
 
 

@@ -95,12 +95,18 @@ def quant_gemv(x: jax.Array, packed: jax.Array, scale: jax.Array,
         raise ValueError(
             f"packed rows {packed.shape[0]} inconsistent with K={K} at "
             f"{bits} bits (expected K/{ppb}={K // ppb}) — pad every K-keyed "
-            "operand together (see ops.quant_gemv_op)")
+            "operand together (see ops.quant_gemv_op); under "
+            "tensor-parallel serving these are SHARD-local shapes, so a "
+            "mismatch here means the in-channel split broke the packing "
+            "contract (serve_plan requires (K/ppb) % tp == 0)")
     if K % group_size or scale.shape[0] != K // group_size \
             or zero.shape[0] != K // group_size:
         raise ValueError(
             f"scale/zero rows {scale.shape[0]}/{zero.shape[0]} inconsistent "
-            f"with K={K}, group_size={group_size}")
+            f"with K={K}, group_size={group_size}; under tensor-parallel "
+            "serving these are SHARD-local shapes — an in-channel split "
+            "must take whole quant groups (serve_plan requires "
+            "ng % tp == 0)")
     bn, bk = min(block_n, N), min(block_k, K)
     assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
     if bk % group_size and group_size % bk:

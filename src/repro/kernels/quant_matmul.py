@@ -120,14 +120,20 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
         raise ValueError(
             f"packed rows {packed.shape[0]} inconsistent with K={K} at "
             f"{bits} bits (expected K/{ppb}={K // ppb}) — pad every K-keyed "
-            "operand together (see ops.quant_matmul_op)")
+            "operand together (see ops.quant_matmul_op); under "
+            "tensor-parallel serving these are SHARD-local shapes, so a "
+            "mismatch here means the in-channel split broke the packing "
+            "contract (serve_plan requires (K/ppb) % tp == 0)")
     if K % group_size or scale.shape[0] != K // group_size \
             or zero.shape[0] != K // group_size:
         raise ValueError(
             f"scale/zero rows {scale.shape[0]}/{zero.shape[0]} inconsistent "
             f"with K={K}, group_size={group_size} (expected "
             f"{max(K // group_size, 1)} whole groups) — pad every K-keyed "
-            "operand together (see ops.quant_matmul_op)")
+            "operand together (see ops.quant_matmul_op); under "
+            "tensor-parallel serving these are SHARD-local shapes — an "
+            "in-channel split must take whole quant groups (serve_plan "
+            "requires ng % tp == 0)")
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     gpt, row_of = _group_tile_index(bk, group_size)

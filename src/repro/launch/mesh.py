@@ -59,6 +59,30 @@ def make_data_mesh(n_devices=None):
     return _DATA_MESH_CACHE[key]
 
 
+_SERVE_MESH_CACHE: dict = {}
+
+
+def serve_mesh(tp: int = 1, n_devices=None):
+    """THE serve-mesh constructor: a ``("data", "model")`` mesh whose
+    ``model`` axis carries the serve-time tensor-parallel degree (the
+    ``--tp N`` flag on the serve CLI and bench), remaining devices on
+    ``data``.  CLI, bench and tests all build the serve mesh through here
+    so they agree on shape and axis names — and on identity: memoized per
+    (device set, tp) for the same jit-tracing-cache reason as
+    :func:`make_data_mesh`."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    tp = int(tp)
+    if tp < 1:
+        raise ValueError(f"serve_mesh: tp must be >= 1, got {tp}")
+    if n % tp:
+        raise ValueError(f"serve_mesh: tp={tp} does not divide the "
+                         f"{n} visible devices")
+    key = (n, tp, tuple(d.id for d in jax.devices()[:n]))
+    if key not in _SERVE_MESH_CACHE:
+        _SERVE_MESH_CACHE[key] = _mk((n // tp, tp), ("data", "model"))
+    return _SERVE_MESH_CACHE[key]
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
@@ -163,7 +187,9 @@ def validate_single_pod(mesh, what: str) -> None:
             f"mesh with axes {mesh.axis_names} (pod extent "
             f"{pod_count(mesh)}); quantization's pipelined block walk is "
             "the only multi-pod consumer — serve each pod with its own "
-            "submesh (launch.mesh.pod_submeshes) instead")
+            "submesh (launch.mesh.pod_submeshes) instead, building it via "
+            "launch.mesh.serve_mesh(tp=N) (the serve CLI/bench --tp N "
+            "path) for tensor-parallel serving within the pod")
 
 
 def batch_spec(mesh) -> P:

@@ -241,37 +241,53 @@ def _prefill_len(cfg: ModelConfig, req: Request) -> int:
     return len(req.prompt) + extra
 
 
+# per-configuration jitted step sets: every run/repeat over the same
+# (cfg, width, backend, store, mesh) must reuse ONE SchedSteps — fresh
+# jit wrappers defeat the tracing cache (the PR 4 recompile class), and
+# the memoized serve_mesh keeps mesh identity stable for the key.
+_SCHED_STEP_CACHE: dict = {}
+
+
 def compile_sched_steps(cfg: ModelConfig, *, max_seq: int,
                         kernel_backend=None, act_bits=None,
                         page_size: int = 0,
                         decode_attn_chunk: int = 1 << 30,
-                        mesh=None) -> SchedSteps:
-    """Jit-wrap the scheduler's step set ONCE per serving configuration.
-    Reuse the result across runs/repeats — rebuilding retraces.
+                        mesh=None, tp_shard: bool = False) -> SchedSteps:
+    """Jit-wrap the scheduler's step set ONCE per serving configuration —
+    memoized per (cfg, width, backend, act_bits, store, mesh, tp_shard),
+    so repeated calls hand back the SAME jitted steps instead of retracing.
     ``page_size > 0`` builds the paged-store step set (page-table-aware
     decode plus the paged admission install step).
 
     ``mesh`` must be single-pod: the scheduler has no cross-pod path (the
     pipelined quantization walk is the only multi-pod consumer) — give
-    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead."""
+    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead.
+    ``tp_shard=True`` routes prefill/decode through the tensor-parallel
+    ServeSpec contract (shard_map over the mesh's ``model`` axis); the
+    admission steps (``write_slot``, paged install) stay plain jit —
+    GSPMD reshards their outputs to the decode step's specs."""
     validate_single_pod(mesh, "compile_sched_steps")
-    model, pstep, dstep = make_sched_steps(
-        cfg, mesh, max_seq=max_seq, act_bits=act_bits,
-        kernel_backend=kernel_backend, page_size=page_size,
-        decode_attn_chunk=decode_attn_chunk)
-    install = None
-    if page_size:
-        install = jax.jit(
-            make_paged_install_step(model, page_size=page_size),
-            static_argnames=("plen",),
-            donate_argnums=cache_donate_argnums(0))
-    return SchedSteps(
-        model=model,
-        prefill=jax.jit(pstep),
-        decode=jax.jit(dstep, donate_argnums=cache_donate_argnums(1)),
-        write_slot=jax.jit(write_slot,
-                           donate_argnums=cache_donate_argnums(0)),
-        install=install, page_size=page_size)
+    key = (cfg, max_seq, kernel_backend, act_bits, page_size,
+           decode_attn_chunk, mesh, tp_shard)
+    if key not in _SCHED_STEP_CACHE:
+        model, pstep, dstep = make_sched_steps(
+            cfg, mesh, max_seq=max_seq, act_bits=act_bits,
+            kernel_backend=kernel_backend, page_size=page_size,
+            decode_attn_chunk=decode_attn_chunk, tp_shard=tp_shard)
+        install = None
+        if page_size:
+            install = jax.jit(
+                make_paged_install_step(model, page_size=page_size),
+                static_argnames=("plen",),
+                donate_argnums=cache_donate_argnums(0))
+        _SCHED_STEP_CACHE[key] = SchedSteps(
+            model=model,
+            prefill=jax.jit(pstep),
+            decode=jax.jit(dstep, donate_argnums=cache_donate_argnums(1)),
+            write_slot=jax.jit(write_slot,
+                               donate_argnums=cache_donate_argnums(0)),
+            install=install, page_size=page_size)
+    return _SCHED_STEP_CACHE[key]
 
 
 def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
@@ -282,7 +298,8 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                     store: str = "dense", page_size: int = 16,
                     num_pages: Optional[int] = None,
                     prefill_chunk: int = 0,
-                    share_prefix: bool = False) -> ServeResult:
+                    share_prefix: bool = False, mesh=None,
+                    tp_shard: bool = False) -> ServeResult:
     """Serve ``requests`` through the slot scheduler.
 
     Returns a :class:`ServeResult`; per-request records are keyed by rid
@@ -320,13 +337,47 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                 f"+ budget ({r.max_new_tokens}) exceeds max_seq ({max_seq})")
     steps_ = compiled if compiled is not None else compile_sched_steps(
         cfg, max_seq=max_seq, kernel_backend=kernel_backend,
-        act_bits=act_bits, page_size=page_size if paged else 0)
+        act_bits=act_bits, page_size=page_size if paged else 0,
+        mesh=mesh, tp_shard=tp_shard)
     if steps_.page_size != (page_size if paged else 0):
         raise ValueError(
             f"compiled step set was built for page_size={steps_.page_size}, "
             f"run wants {'page_size=%d' % page_size if paged else 'dense'}")
     model = steps_.model
     spec = model.cache_spec
+
+    # TP serving: commit params/cache — and every host push below — to the
+    # ServeSpec placement ONCE.  Anything left committed to device 0 would
+    # be resharded onto the mesh at every jitted step dispatch: an implicit
+    # device-to-device transfer per step, slow and rejected by the serving
+    # sanitizer's transfer_guard.
+    tp_rep = None
+    if tp_shard and mesh is not None:
+        from repro.launch.sharding import ServeSpec
+        tp_spec = ServeSpec.for_mesh(mesh, cfg)
+        if tp_spec.active:
+            tp_plan = tp_spec.plan(params)
+            params = tp_spec.place_params(params, tp_plan)
+            tp_rep = tp_spec.replicated()
+
+    def push(a):
+        return (jax.device_put(a.copy(), tp_rep) if tp_rep is not None
+                else _push(a))
+
+    def put(a):
+        return (jax.device_put(a, tp_rep) if tp_rep is not None
+                else jax.device_put(a))
+
+    def i32(v):
+        return (jax.device_put(np.int32(v), tp_rep) if tp_rep is not None
+                else _i32(v))
+
+    def set_slot(a, s, v):
+        return _set_slot_jit(a, i32(s), i32(v))
+
+    def place_cache(c):
+        return (tp_spec.place_cache(spec, c, tp_plan)
+                if tp_rep is not None else c)
 
     if paged:
         if num_pages is None:
@@ -343,17 +394,17 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                     f"num_pages or lower the request's length")
     else:
         cstore = DenseCacheStore(model, slots=slots, max_seq=max_seq)
-    cache = cstore.cache
-    ptab_d = _push(cstore.ptab_h) if paged else None
+    cache = place_cache(cstore.cache)
+    ptab_d = push(cstore.ptab_h) if paged else None
     # chunked prefill applies to chunkable families only; prefix sharing
     # additionally needs the paged store (pages are the sharing unit)
     chunk_ok = prefill_chunk > 0 and spec.chunkable
     share_ok = share_prefix and paged and chunk_ok and spec.shareable
 
-    tok = _push(np.zeros((slots,), np.int32))
-    pos = _push(np.zeros((slots,), np.int32))
+    tok = push(np.zeros((slots,), np.int32))
+    pos = push(np.zeros((slots,), np.int32))
     active_h = np.zeros((slots,), bool)        # host mirror of occupancy
-    active_d = _push(active_h)
+    active_d = push(active_h)
     slot_rid = np.full((slots,), -1, np.int64)
     remaining = np.zeros((slots,), np.int64)   # decode steps left per slot
     res = {r.rid: {"arrival": r.arrival, "admit_step": None,
@@ -372,8 +423,8 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
     def finish_prefill(s, req, tok0, lg1):
         """Common post-prefill bookkeeping (whole or final chunk)."""
         nonlocal tok, pos
-        tok = _set_slot(tok, s, tok0)
-        pos = _set_slot(pos, s, _prefill_len(cfg, req))
+        tok = set_slot(tok, s, tok0)
+        pos = set_slot(pos, s, _prefill_len(cfg, req))
         r = res[req.rid]
         r["admit_step"] = t
         r["tokens"].append(tok0)
@@ -419,22 +470,22 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                 inflight = {"req": req, "slot": s,
                             "cursor": plan.shared_tokens,
                             "c1": (None if paged
-                                   else model.init_cache(1, max_seq))}
+                                   else place_cache(model.init_cache(1, max_seq)))}
                 continue
             # ---- whole prefill at full cache width ------------------------
             tp0 = time.time()
-            batch = {"tokens": jax.device_put(req.prompt[None])}
+            batch = {"tokens": put(req.prompt[None])}
             for k, v in (req.extras or {}).items():
-                batch[k] = jax.device_put(v[None])
-            c1 = model.init_cache(1, max_seq)
+                batch[k] = put(v[None])
+            c1 = place_cache(model.init_cache(1, max_seq))
             lg1, c1 = steps_.prefill(params, batch, c1)
             # reprolint: ok[host-sync] — the only per-admission sync (counted); explicit device_get so transfer_guard allows it
             tok0 = int(np.asarray(jax.device_get(jnp.argmax(lg1, -1)))[0])
             if paged:
-                cache = steps_.install(cache, c1, _i32(s), _push(cstore.ptab_h[s]),
+                cache = steps_.install(cache, c1, i32(s), push(cstore.ptab_h[s]),
                                        plen=_prefill_len(cfg, req))
             else:
-                cache = steps_.write_slot(cache, c1, _i32(s))
+                cache = steps_.write_slot(cache, c1, i32(s))
             # the argmax sync above already drained the dispatch queue, so
             # blocking here charges ONLY the slot install to the admission
             # window instead of letting it leak into decode_secs
@@ -449,20 +500,20 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
             cur = inflight["cursor"]
             plen = len(req.prompt)   # chunkable families are text-only
             end = min(cur + prefill_chunk, plen)
-            chunk = {"tokens": jax.device_put(req.prompt[None, cur:end])}
+            chunk = {"tokens": put(req.prompt[None, cur:end])}
             if paged:
-                lg1, cache = steps_.prefill(params, chunk, cache, _i32(cur),
-                                            _push(cstore.ptab_h[s:s + 1]))
+                lg1, cache = steps_.prefill(params, chunk, cache, i32(cur),
+                                            push(cstore.ptab_h[s:s + 1]))
             else:
                 lg1, inflight["c1"] = steps_.prefill(params, chunk,
                                                      inflight["c1"],
-                                                     _i32(cur))
+                                                     i32(cur))
             inflight["cursor"] = end
             if end == plen:
                 # reprolint: ok[host-sync] — per-admission sync, chunked path (same contract as above)
                 tok0 = int(np.asarray(jax.device_get(jnp.argmax(lg1, -1)))[0])
                 if not paged:
-                    cache = steps_.write_slot(cache, inflight["c1"], _i32(s))
+                    cache = steps_.write_slot(cache, inflight["c1"], i32(s))
                 jax.block_until_ready(cache)   # reprolint: ok[host-sync] — admission-window timing boundary
                 dirty |= finish_prefill(s, req, tok0, lg1)
                 ptab_dirty |= paged
@@ -487,9 +538,9 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                 t += 1                           # chunk-only iteration
             continue
         if dirty:
-            active_d = _push(active_h)
+            active_d = push(active_h)
         if ptab_dirty:
-            ptab_d = _push(cstore.ptab_h)
+            ptab_d = push(cstore.ptab_h)
         # ---- one masked decode step over every slot -----------------------
         if paged:
             logits, tok, pos, cache = steps_.decode(params, cache, tok, pos,
@@ -518,9 +569,9 @@ def serve_scheduled(cfg: ModelConfig, params, requests: List[Request], *,
                 slot_rid[s] = -1
                 cstore.release(int(s))
             active_h[done] = False
-            active_d = _push(active_h)
+            active_d = push(active_h)
             if paged:
-                ptab_d = _push(cstore.ptab_h)
+                ptab_d = push(cstore.ptab_h)
 
     tok.block_until_ready()                      # reprolint: ok[host-sync] — closes the timed region
     total_secs = time.time() - t_start

@@ -93,21 +93,36 @@ def build_params(cfg, params, qcfg: QuantConfig, data_cfg: DataConfig, *,
     return packed, report
 
 
+# per-(cfg, backend, act_bits, mesh, tp_shard) jit pairs: the serve-mesh
+# path must hand every caller the SAME jitted steps (distinct-but-equal
+# wrappers defeat jit's tracing cache — the PR 4 recompile class), and the
+# memoized serve_mesh guarantees mesh identity so the key is cheap.
+_SERVE_STEP_CACHE: dict = {}
+
+
 def compile_serve_steps(cfg, *, kernel_backend=None, act_bits=None,
-                        mesh=None):
-    """Jit-wrap the prefill/decode steps ONCE for a (backend, act_bits)
-    serving configuration.  Benchmarks must reuse the returned pair across
-    timed repeats — re-wrapping per call would retrace and recompile, and
-    the timings would measure XLA, not serving.
+                        mesh=None, tp_shard: bool = False):
+    """Jit-wrap the prefill/decode steps ONCE for a (backend, act_bits,
+    mesh) serving configuration — memoized, so benchmarks and the repeated
+    bench/CLI call sites all reuse one compiled pair per configuration
+    (re-wrapping per call would retrace and recompile, and the timings
+    would measure XLA, not serving).
 
     ``mesh`` must be single-pod: serving has no cross-pod path (the
     pipelined quantization walk is the only multi-pod consumer) — give
-    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead."""
+    each pod its own submesh via ``launch.mesh.pod_submeshes`` instead.
+    ``tp_shard=True`` routes the steps through the tensor-parallel
+    ServeSpec contract (shard_map over the mesh's ``model`` axis)."""
     validate_single_pod(mesh, "compile_serve_steps")
-    _, prefill_step, decode_step = make_serve_steps(
-        cfg, mesh, act_bits=act_bits, kernel_backend=kernel_backend)
-    return (jax.jit(prefill_step),
+    key = (cfg, kernel_backend, act_bits, mesh, tp_shard)
+    if key not in _SERVE_STEP_CACHE:
+        _, prefill_step, decode_step = make_serve_steps(
+            cfg, mesh, act_bits=act_bits, kernel_backend=kernel_backend,
+            tp_shard=tp_shard)
+        _SERVE_STEP_CACHE[key] = (
+            jax.jit(prefill_step),
             jax.jit(decode_step, donate_argnums=cache_donate_argnums(1)))
+    return _SERVE_STEP_CACHE[key]
 
 
 # the +1 constant lives inside the compiled program instead of being
@@ -117,7 +132,8 @@ _inc1 = jax.jit(lambda p: p + 1)
 
 def serve_requests(cfg, model, params, prompts, *, gen: int,
                    kernel_backend=None, act_bits=None, compiled=None,
-                   collect_logits=True, max_seq=None) -> "ServeResult":
+                   collect_logits=True, max_seq=None, mesh=None,
+                   tp_shard: bool = False) -> "ServeResult":
     """Prefill + lock-step batched decode (uniform lengths, fixed ``gen``).
 
     Returns a ``repro.launch.scheduler.ServeResult`` whose ``tokens``
@@ -139,11 +155,30 @@ def serve_requests(cfg, model, params, prompts, *, gen: int,
         raise ValueError(f"max_seq {max_seq} < prompt+gen "
                          f"{prompt_len + gen}")
     pstep, dstep = compiled if compiled is not None else compile_serve_steps(
-        cfg, kernel_backend=kernel_backend, act_bits=act_bits)
+        cfg, kernel_backend=kernel_backend, act_bits=act_bits, mesh=mesh,
+        tp_shard=tp_shard)
+
+    # TP serving: commit params/cache to their ServeSpec placement ONCE,
+    # off the timed loop — otherwise every jitted step dispatch reshards
+    # the device-0 trees onto the mesh (an implicit device-to-device
+    # transfer per step: slow, and rejected by the serving sanitizer)
+    rep = None
+    if tp_shard and mesh is not None:
+        from repro.launch.sharding import ServeSpec
+        tp_spec = ServeSpec.for_mesh(mesh, cfg)
+        if tp_spec.active:
+            plan = tp_spec.plan(params)
+            params = tp_spec.place_params(params, plan)
+            rep = tp_spec.replicated()
 
     cache = model.init_cache(B, max_seq)
+    if rep is not None:
+        cache = tp_spec.place_cache(model.cache_spec, cache, plan)
+        toks_in = jax.device_put(prompts, rep)
+    else:
+        toks_in = jax.device_put(prompts)
     t0 = time.time()
-    logits, cache = pstep(params, {"tokens": jax.device_put(prompts)}, cache)
+    logits, cache = pstep(params, {"tokens": toks_in}, cache)
     logits.block_until_ready()   # reprolint: ok[host-sync] — prefill timing boundary
     t_prefill = time.time() - t0
 
@@ -152,7 +187,9 @@ def serve_requests(cfg, model, params, prompts, *, gen: int,
     # host-built then explicitly placed / jit-incremented: eager jnp.full
     # and `pos + 1` each device_put a scalar constant per call, which the
     # serving sanitizer's transfer_guard rejects
-    pos = jax.device_put(np.full((B,), prompt_len, np.int32))
+    pos = (jax.device_put(np.full((B,), prompt_len, np.int32), rep)
+           if rep is not None
+           else jax.device_put(np.full((B,), prompt_len, np.int32)))
     toks = [tok]
     t0 = time.time()
     for _ in range(gen - 1):
@@ -221,6 +258,12 @@ def main(argv=None):
     ap.add_argument("--share-prefix", action="store_true",
                     help="copy-on-write sharing of full prompt-prefix pages "
                          "(paged store + chunked prefill only)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="serve-time tensor parallelism: shard packed "
+                         "QTensor weights and KV heads over the 'model' "
+                         "axis of launch.mesh.serve_mesh(tp=N) via the "
+                         "ServeSpec contract; default: no mesh "
+                         "(single-device serving)")
     ap.add_argument("--calib-samples", type=int, default=8)
     ap.add_argument("--par-iters", type=int, default=4)
     ap.add_argument("--par-steps", type=int, default=20)
@@ -243,6 +286,11 @@ def main(argv=None):
 
     act = qcfg.act_bits if args.method != "none" else None
 
+    mesh = None
+    if args.tp is not None:
+        from repro.launch.mesh import serve_mesh
+        mesh = serve_mesh(tp=args.tp)
+
     if args.slots is not None:
         # ---- scheduled serving (continuous batching) ------------------------
         from repro.launch.scheduler import make_workload, serve_scheduled
@@ -262,7 +310,8 @@ def main(argv=None):
                                 page_size=args.page_size,
                                 num_pages=args.num_pages,
                                 prefill_chunk=args.prefill_chunk,
-                                share_prefix=args.share_prefix)
+                                share_prefix=args.share_prefix,
+                                mesh=mesh, tp_shard=mesh is not None)
         lat = sched.latency_steps
         print(f"[serve] scheduled {args.requests} requests over "
               f"{args.slots} slots in {sched.steps} decode steps "
@@ -293,7 +342,8 @@ def main(argv=None):
     corpus = SyntheticCorpus(data_cfg)
     prompts = corpus.batch(0)["tokens"][:, :args.prompt_len]
     stats = serve_requests(cfg, model, served, prompts, gen=args.gen,
-                           kernel_backend=qcfg.kernel_backend, act_bits=act)
+                           kernel_backend=qcfg.kernel_backend, act_bits=act,
+                           mesh=mesh, tp_shard=mesh is not None)
     B, gen = args.requests, args.gen
     dt = stats.prefill_secs + stats.decode_secs
     print(f"[serve] {B} requests x {gen} tokens in {dt:.2f}s "

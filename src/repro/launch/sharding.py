@@ -15,8 +15,10 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import PACK_FACTOR, QTensor
 from repro.launch.mesh import dp_axes, tp_axis, tp_size
+from repro.models.common import LEAF_FIXED, LEAF_TOKEN
+from repro.models.layers import PsumWeight
 
 # logical name -> tuple of mesh axes (joined when multiple)
 def logical_table(mesh, overrides=None):
@@ -220,6 +222,14 @@ class ParamSpec:
         return cls(mesh, tp_axis(mesh) if mesh is not None else None,
                    tp_size(mesh))
 
+    @classmethod
+    def for_serving(cls, mesh, cfg: ModelConfig) -> "ServeSpec":
+        """The serve-time side of the contract: same mesh/axis/degree
+        resolution, grown with the family split tables, cfg/param
+        localization and cache placement the serving stack needs (see
+        :class:`ServeSpec`)."""
+        return ServeSpec.for_mesh(mesh, cfg)
+
     @property
     def active(self) -> bool:
         return self.axis is not None
@@ -344,3 +354,344 @@ def cache_shardings(mesh, cache_struct, cfg: ModelConfig):
                 spec[-1] = tp
         return NamedSharding(mesh, P(*spec))
     return jax.tree_util.tree_map(one, cache_struct)
+
+
+# --------------------------------------------------------------------------
+# ServeSpec: the serving stack's tensor-parallel placement contract
+# --------------------------------------------------------------------------
+#
+# Serve-time TP is shard_map-based (the packed QTensor leaves must reach the
+# kernels as LOCAL shards, not GSPMD-annotated global arrays): each family's
+# prefill/decode step runs inside shard_map over ``tp_axis(mesh)`` with
+# per-leaf specs derived here.  The split tables are FAMILY-keyed because
+# leaf names collide across families with different layouts (rwkv's time-mix
+# ``wk``/``wv`` are (d, d) mixers followed by a GLOBAL per-head group norm —
+# sharding them like attention projections would be wrong, so rwkv shards
+# only its channel-mix pair).
+#
+# Feasibility is decided per ATOMIC GROUP, not per leaf: an out-split
+# producer and its in-split consumer must agree (wo consumes the local heads
+# wq/wk/wv produced; w_down consumes the local d_ff w_gate/w_up produced),
+# so if ANY member of a group cannot split — head counts or a QTensor's
+# group-count/packed-row dims not dividing the TP degree — the WHOLE group
+# falls back to replicated, the same elastic-scaling contract as
+# ``resolve_spec``/``ParamSpec``.  Embedding/unembed stay replicated by
+# design: vocab sharding would add an all-gather per step, and the serve
+# HLO contract permits only all-reduce collectives (tools/reprolint --hlo).
+
+# leaf name -> split ("out" | "in" | "expert"), per family.  Absent names
+# (norms, routers, rwkv time-mix, mamba in/out_proj — the latter consumed
+# via fixed-offset jnp.split) replicate.
+SERVE_SPLIT_TABLES = {
+    "dense": {"wq": "out", "wk": "out", "wv": "out", "wo": "in",
+              "w_gate": "out", "w_up": "out", "w_down": "in"},
+    "moe": {"wq": "out", "wk": "out", "wv": "out", "wo": "in",
+            "w_gate": "expert", "w_up": "expert", "w_down": "expert"},
+    "encdec": {"wq": "out", "wk": "out", "wv": "out", "wo": "in",
+               "w_up": "out", "w_down": "in"},
+    "rwkv": {"ck": "out", "cv": "in"},
+}
+SERVE_SPLIT_TABLES["vlm"] = SERVE_SPLIT_TABLES["dense"]
+SERVE_SPLIT_TABLES["hybrid"] = SERVE_SPLIT_TABLES["dense"]
+
+# atomic fallback groups per family (frozensets of leaf names)
+SERVE_GROUPS = {
+    "dense": (frozenset({"wq", "wk", "wv", "wo"}),
+              frozenset({"w_gate", "w_up", "w_down"})),
+    "moe": (frozenset({"wq", "wk", "wv", "wo"}),
+            frozenset({"w_gate", "w_up", "w_down"})),
+    "encdec": (frozenset({"wq", "wk", "wv", "wo"}),
+               frozenset({"w_up", "w_down"})),
+    "rwkv": (frozenset({"ck", "cv"}),),
+}
+SERVE_GROUPS["vlm"] = SERVE_GROUPS["dense"]
+SERVE_GROUPS["hybrid"] = SERVE_GROUPS["dense"]
+
+# the group whose sharding implies head-local attention (cfg/cache localize)
+_ATTN_GROUP_MEMBER = "wq"
+
+
+def _split_ok(leaf, split: str, tp: int) -> bool:
+    """Can ``leaf`` split ``split``-wise over a TP degree of ``tp``?
+
+    QTensor divisibility covers every K-keyed operand at once: an in-split
+    shard must take whole quant groups (group-count dim ``ng % tp``) AND
+    whole packed container rows (``(K // ppb) % tp``), or the kernels' padded
+    dequant contract breaks on the shard boundary."""
+    if tp <= 1:
+        return True
+    if isinstance(leaf, QTensor):
+        K, N = leaf.shape[-2], leaf.shape[-1]
+        ppb = PACK_FACTOR[leaf.bits]
+        ng = leaf.scale.shape[-2]
+        if split == "out":
+            return N % tp == 0
+        if split == "in":
+            return ng % tp == 0 and (K // ppb) % tp == 0
+        if split == "expert":
+            return leaf.packed.ndim >= 3 and leaf.packed.shape[-3] % tp == 0
+        return False
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    if split == "out":
+        return leaf.shape[-1] % tp == 0
+    if split == "in":
+        return leaf.shape[-2] % tp == 0
+    if split == "expert":
+        return leaf.ndim >= 3 and leaf.shape[-3] % tp == 0
+    return False
+
+
+def serve_plan(cfg: ModelConfig, params, tp: int) -> dict:
+    """The serve placement decision: ``{leaf name: split}`` for every leaf
+    that SHARDS over the TP axis (absent = replicated).
+
+    Pure function of (family, leaf shapes/QTensor layouts, tp) — computable
+    at trace time inside a jitted step (QTensor aux and shapes are static)
+    and directly pinnable by tests.  Group atomicity: the attention group
+    additionally needs ``num_heads`` and ``num_kv_heads`` divisible by
+    ``tp`` (the forward reshapes heads), the MoE expert group needs the
+    expert dim divisible; W2/W3 grouped codes whose group-count dim does
+    not divide ``tp`` push their whole group back to replicated."""
+    if tp < 1:
+        raise ValueError(f"serve_plan: TP degree must be >= 1, got {tp}")
+    table = SERVE_SPLIT_TABLES.get(cfg.family, SERVE_SPLIT_TABLES["dense"])
+    groups = SERVE_GROUPS.get(cfg.family, SERVE_GROUPS["dense"])
+
+    found: dict = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (k,))
+            return
+        name = path[-1]
+        if name in table:
+            found.setdefault(name, []).append(node)
+
+    walk(params, ())
+    plan: dict = {}
+    for group in groups:
+        members = sorted(n for n in group if n in found)
+        if not members:
+            continue
+        ok = all(_split_ok(leaf, table[n], tp)
+                 for n in members for leaf in found[n])
+        if _ATTN_GROUP_MEMBER in group:
+            ok = ok and cfg.num_heads % tp == 0 \
+                and cfg.num_kv_heads % tp == 0
+        if ok:
+            for n in members:
+                plan[n] = table[n]
+    return plan
+
+
+def _localize_qtensor(qt: QTensor) -> QTensor:
+    """Rebuild a QTensor's STATIC aux from its (possibly shard-local) array
+    shapes.  Inside shard_map the packed/scale/zero children are local but
+    the aux (bits, group_size, logical shape) rides the treedef unchanged
+    from the global tree — the kernels' row-count validation would reject
+    the shard.  Out-split shrinks ``out``; in-split shrinks ``in`` by whole
+    groups (``group_size`` itself is preserved: ``ng % tp == 0`` is a
+    feasibility precondition); expert splits only touch leading dims, which
+    never live in ``shape``."""
+    ppb = PACK_FACTOR[qt.bits]
+    k_local = qt.packed.shape[-2] * ppb
+    n_local = qt.packed.shape[-1]
+    if (k_local, n_local) == tuple(qt.shape[-2:]):
+        return qt
+    return QTensor(packed=qt.packed, scale=qt.scale, zero=qt.zero,
+                   bits=qt.bits, group_size=qt.group_size,
+                   shape=(k_local, n_local), act_scale=qt.act_scale)
+
+
+def _spec_at(ndim: int, dim: int, axis) -> P:
+    spec = [None] * ndim
+    spec[dim] = axis
+    return P(*spec)
+
+
+def _serve_qtensor_spec(qt: QTensor, split, axis) -> QTensor:
+    """shard_map spec node for a QTensor leaf: same treedef (aux included),
+    PartitionSpec children."""
+    rep = P()
+    if split == "out":
+        packed = _spec_at(qt.packed.ndim, -1, axis)
+        scale = _spec_at(qt.scale.ndim, -1, axis)
+        zero = _spec_at(qt.zero.ndim, -1, axis)
+        act = rep if qt.act_scale is not None else None
+    elif split == "in":
+        packed = _spec_at(qt.packed.ndim, -2, axis)
+        scale = _spec_at(qt.scale.ndim, -2, axis)
+        zero = _spec_at(qt.zero.ndim, -2, axis)
+        act = (_spec_at(qt.act_scale.ndim, -1, axis)
+               if qt.act_scale is not None else None)
+    elif split == "expert":
+        packed = _spec_at(qt.packed.ndim, -3, axis)
+        scale = _spec_at(qt.scale.ndim, -3, axis)
+        zero = _spec_at(qt.zero.ndim, -3, axis)
+        act = (_spec_at(qt.act_scale.ndim, -2, axis)
+               if qt.act_scale is not None else None)
+    else:
+        packed = scale = zero = rep
+        act = rep if qt.act_scale is not None else None
+    return QTensor(packed=packed, scale=scale, zero=zero, bits=qt.bits,
+                   group_size=qt.group_size, shape=qt.shape, act_scale=act)
+
+
+def serve_param_specs(params, plan: dict, axis):
+    """shard_map ``in_specs`` pytree for a param tree under ``plan``.
+
+    QTensor leaves become QTensor spec NODES (matching aux, PartitionSpec
+    children) so the spec tree's treedef matches the params'."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        split = plan.get(path[-1]) if axis is not None else None
+        if isinstance(node, QTensor):
+            return _serve_qtensor_spec(node, split, axis)
+        if node is None:
+            return None
+        if split == "out":
+            return _spec_at(node.ndim, -1, axis)
+        if split == "in":
+            return _spec_at(node.ndim, -2, axis)
+        if split == "expert":
+            return _spec_at(node.ndim, -3, axis)
+        return P()
+    return walk(params, ())
+
+
+def localize_serve_params(params, plan: dict, axis):
+    """Inside-shard_map view of the param tree: QTensor aux rebuilt from the
+    local array shapes, and in-split leaves wrapped in
+    :class:`repro.models.layers.PsumWeight` so ``L.matmul`` adds the
+    in-channel psum epilogue — the family forwards stay sharding-free."""
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        split = plan.get(path[-1]) if axis is not None else None
+        if isinstance(node, QTensor):
+            node = _localize_qtensor(node) if split else node
+        if split == "in":
+            return PsumWeight(node, axis)
+        return node
+    return walk(params, ())
+
+
+def localize_serve_cfg(cfg: ModelConfig, plan: dict, tp: int) -> ModelConfig:
+    """Per-shard model config: head counts divided by the TP degree when the
+    attention group is sharded (the forward reshapes q/k/v by them), with
+    ``head_dim`` pinned to its resolved value so dividing ``num_heads`` does
+    not silently change it.  ``d_ff`` never appears in a forward reshape and
+    MoE ``num_experts`` stays GLOBAL (routing is over global expert ids;
+    only the capacity gather is expert-local)."""
+    if tp <= 1 or plan.get(_ATTN_GROUP_MEMBER) != "out":
+        return cfg
+    return cfg.replace(num_heads=cfg.num_heads // tp,
+                       num_kv_heads=cfg.num_kv_heads // tp,
+                       head_dim=cfg.resolved_head_dim)
+
+
+def serve_cache_specs(cache_spec, cache, plan: dict, axis, tp: int):
+    """shard_map specs for a family cache tree, keyed on the declared
+    :class:`models.common.CacheSpec` leaf KIND:
+
+      * token/fixed leaves (KV lanes ``(L, B, S, H, hd)``, paged pools
+        ``(L, P, psz, H, hd)``, encdec cross caches) shard their KV-head
+        dim — dim -2 in every in-tree layout — iff the attention group is
+        sharded and the head count divides;
+      * state leaves (rwkv shift/wkv, mamba conv/ssm) replicate: recurrent
+        state channels are coupled through replicated mixers.
+
+    Page tables / token / pos / active vectors replicate (specs for those
+    ride in the step builder, not here)."""
+    attn = plan.get(_ATTN_GROUP_MEMBER) == "out" and axis is not None
+
+    def walk(tree, prefix=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, prefix + (k,)) for k, v in tree.items()}
+        ls = cache_spec.leaf("/".join(prefix))
+        if (attn and ls.kind in (LEAF_TOKEN, LEAF_FIXED)
+                and tree.ndim >= 2 and tree.shape[-2] % tp == 0):
+            return _spec_at(tree.ndim, -2, axis)
+        return P()
+    return walk(cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """One sharding contract from :class:`ParamSpec` to the decode kernels.
+
+    The serving counterpart of ``ParamSpec`` (construct via
+    ``ParamSpec.for_serving(mesh, cfg)`` or :meth:`for_mesh`): one object
+    answers, for a family's packed params, its cache and its per-shard
+    config, how serve-time placement works over ``tp_axis(mesh)``.
+    ``launch.steps.make_serve_steps(tp_shard=True)`` is the sole consumer
+    wiring it into shard_map; everything here is a pure function of static
+    shapes so the whole contract resolves at trace time."""
+
+    mesh: Any
+    axis: Optional[str]
+    size: int
+    cfg: ModelConfig
+
+    @classmethod
+    def for_mesh(cls, mesh, cfg: ModelConfig) -> "ServeSpec":
+        return cls(mesh, tp_axis(mesh) if mesh is not None else None,
+                   tp_size(mesh), cfg)
+
+    @property
+    def active(self) -> bool:
+        return self.axis is not None
+
+    def plan(self, params) -> dict:
+        return serve_plan(self.cfg, params, self.size)
+
+    def local_cfg(self, plan: dict) -> ModelConfig:
+        return localize_serve_cfg(self.cfg, plan, self.size)
+
+    def param_specs(self, params, plan: dict):
+        return serve_param_specs(params, plan, self.axis)
+
+    def localize_params(self, params, plan: dict):
+        return localize_serve_params(params, plan, self.axis)
+
+    def cache_specs(self, cache_spec, cache, plan: dict):
+        return serve_cache_specs(cache_spec, cache, plan, self.axis,
+                                 self.size)
+
+    # ---- explicit placement (transfer_guard-clean serving) -----------------
+    # The shard-mapped steps declare in_specs, but jit dispatch RESHARDS any
+    # operand not already committed to its contract placement — a full
+    # device-0 -> mesh copy of the params EVERY step, which the serving
+    # sanitizer's transfer_guard rightly rejects as an implicit transfer.
+    # Callers place params/cache once, off the timed loop, with these.
+
+    def shardings(self, spec_tree):
+        """PartitionSpec tree -> NamedSharding tree (device_put targets)."""
+        return jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def place_params(self, params, plan: dict):
+        """Commit the GLOBAL param tree to its contract placement (one
+        explicit device_put; sharded leaves land split over the TP axis,
+        the rest replicated across the mesh)."""
+        if not self.active:
+            return params
+        return jax.device_put(params,
+                              self.shardings(self.param_specs(params, plan)))
+
+    def place_cache(self, cache_spec, cache, plan: dict):
+        """Commit a freshly initialized cache tree to its contract
+        placement (KV-head-sharded lanes, replicated state leaves)."""
+        if not self.active:
+            return cache
+        return jax.device_put(
+            cache, self.shardings(self.cache_specs(cache_spec, cache, plan)))
+
+    def replicated(self):
+        """Placement for mesh-replicated step operands (tokens, pos,
+        active masks, page tables)."""
+        return jax.sharding.NamedSharding(self.mesh, P())

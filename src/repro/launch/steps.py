@@ -185,7 +185,8 @@ def quantize_param_struct(params_struct, cfg: ModelConfig, qcfg: QuantConfig):
 def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
                      attn_chunk: int = 512, extra_overrides=None,
                      kv_bits=None, kernel_backend=None,
-                     decode_attn_chunk: int = 1 << 30, page_size: int = 0):
+                     decode_attn_chunk: int = 1 << 30, page_size: int = 0,
+                     tp_shard: bool = False):
     """``kernel_backend`` ("xla" | "pallas" | None = env/default) selects the
     QTensor matmul path for BOTH the prefill and decode steps — this is the
     explicit per-run dispatch the serving launcher and benchmarks use.
@@ -196,7 +197,26 @@ def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
     pallas parity tests pin it to ``page_size`` so both kernels walk the
     same chunk grid.  ``page_size > 0`` builds paged-cache steps: prefill
     accepts ``start_pos``/``ptab`` (chunked prefill over a page table) and
-    decode accepts ``ptab``."""
+    decode accepts ``ptab``.
+
+    ``tp_shard=True`` routes both steps through the serve-time
+    tensor-parallel contract (:class:`repro.launch.sharding.ServeSpec`):
+    shard_map over ``tp_axis(mesh)`` with per-leaf specs derived from the
+    contract, packed QTensor leaves reaching the kernels as LOCAL shards.
+    This is opt-in — the default ``mesh=`` path keeps today's GSPMD
+    annotation-only behavior (used by the dry-run's serve sharding cells)."""
+    if tp_shard:
+        if mesh is None:
+            raise ValueError("make_serve_steps: tp_shard=True requires a "
+                             "mesh (build one with launch.mesh.serve_mesh)")
+        if extra_overrides:
+            raise ValueError("make_serve_steps: shard_overrides do not "
+                             "compose with tp_shard=True (the ServeSpec "
+                             "contract owns serve-time placement)")
+        return _make_tp_serve_steps(
+            cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
+            kv_bits=kv_bits, kernel_backend=kernel_backend,
+            decode_attn_chunk=decode_attn_chunk, page_size=page_size)
     model = get_model(cfg)
     ctx = make_ctx(cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
                    remat=False, shard_overrides=extra_overrides,
@@ -215,6 +235,94 @@ def make_serve_steps(cfg: ModelConfig, mesh=None, *, act_bits=None,
     def decode_step(params, cache, tokens, pos, active=None, ptab=None):
         return model.decode_step(params, cache, tokens, pos, dctx,
                                  active=active, ptab=ptab)
+
+    return model, prefill_step, decode_step
+
+
+def _make_tp_serve_steps(cfg: ModelConfig, mesh, *, act_bits=None,
+                         attn_chunk: int = 512, kv_bits=None,
+                         kernel_backend=None,
+                         decode_attn_chunk: int = 1 << 30,
+                         page_size: int = 0):
+    """Serve steps under the tensor-parallel contract.
+
+    Both steps run the family forward inside ``shard_map_compat`` over the
+    FULL serve mesh: the ``model`` axis carries the contract's splits, any
+    ``data`` axes replicate (P() specs).  Everything placement-related —
+    the plan, the per-shard config, the spec trees — resolves at TRACE
+    time from static shapes (``ServeSpec`` is a pure function of them), so
+    the jitted step compiles to one shard_mapped program with no host
+    round-trips.  Inside the body the param tree is LOCALIZED: QTensor aux
+    rebuilt from shard shapes, in-split weights wrapped in ``PsumWeight``
+    so ``L.matmul`` adds the psum epilogue — the family forwards never see
+    sharding logic.  At TP=1 every spec is trivial and psum over the
+    size-1 axis is the identity: bit-identical to the un-meshed path (the
+    pinned ``tp_serve_parity`` guarantee)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch import sharding as shp
+    from repro.launch.mesh import shard_map_compat, validate_single_pod
+
+    validate_single_pod(mesh, "make_serve_steps(tp_shard=True)")
+    model = get_model(cfg)
+    spec = shp.ServeSpec.for_mesh(mesh, cfg)
+    ax = spec.axis
+    if ax is None:
+        raise ValueError("make_serve_steps: tp_shard=True needs a mesh "
+                         "with a 'model' axis (launch.mesh.serve_mesh)")
+
+    def replicate(tree):
+        return jax.tree_util.tree_map(lambda _: P(), tree)
+
+    def trace_ctx(params, *, decode):
+        plan = spec.plan(params)
+        lcfg = spec.local_cfg(plan)
+        # the registry lambdas close over their cfg (head counts drive the
+        # q/k/v reshapes), so the shard-local forward needs a model built
+        # from the LOCALIZED config; the global `model` keeps describing
+        # the global cache layout (init_cache / cache_spec)
+        lmodel = model if lcfg is cfg else get_model(lcfg)
+        ep_inner = ax if plan.get("w_gate") == "expert" else None
+        ctx = make_ctx(lcfg, None, act_bits=act_bits,
+                       attn_chunk=(decode_attn_chunk if decode
+                                   else attn_chunk),
+                       remat=False, decode=decode,
+                       kernel_backend=kernel_backend, kv_bits=kv_bits,
+                       page_size=page_size, ep_inner=ep_inner)
+        return plan, ctx, lmodel
+
+    def prefill_step(params, batch, cache, start_pos=0, ptab=None):
+        plan, ctx, lmodel = trace_ctx(params, decode=False)
+        pspecs = spec.param_specs(params, plan)
+        cspecs = spec.cache_specs(model.cache_spec, cache, plan)
+        start = jnp.asarray(start_pos, jnp.int32)
+
+        def body(p, b, c, sp, pt):
+            lp = spec.localize_params(p, plan)
+            return lmodel.prefill(lp, b, c, ctx, start_pos=sp, ptab=pt)
+
+        return shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(pspecs, replicate(batch), cspecs, P(),
+                      replicate(ptab)),
+            out_specs=(P(), cspecs),
+        )(params, batch, cache, start, ptab)
+
+    def decode_step(params, cache, tokens, pos, active=None, ptab=None):
+        plan, dctx, lmodel = trace_ctx(params, decode=True)
+        pspecs = spec.param_specs(params, plan)
+        cspecs = spec.cache_specs(model.cache_spec, cache, plan)
+
+        def body(p, c, t, po, a, pt):
+            lp = spec.localize_params(p, plan)
+            return lmodel.decode_step(lp, c, t, po, dctx, active=a, ptab=pt)
+
+        return shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(pspecs, cspecs, P(), P(), replicate(active),
+                      replicate(ptab)),
+            out_specs=(P(), cspecs),
+        )(params, cache, tokens, pos, active, ptab)
 
     return model, prefill_step, decode_step
 
@@ -279,7 +387,8 @@ def make_paged_install_step(model, *, page_size: int):
 def make_sched_steps(cfg: ModelConfig, mesh=None, *, max_seq: int,
                      act_bits=None, attn_chunk: int = 512,
                      extra_overrides=None, kv_bits=None, kernel_backend=None,
-                     decode_attn_chunk: int = 1 << 30, page_size: int = 0):
+                     decode_attn_chunk: int = 1 << 30, page_size: int = 0,
+                     tp_shard: bool = False):
     """Step pair for the slot scheduler (``repro.launch.scheduler``).
 
     Returns ``(model, prefill_step, sched_decode_step)``.  The decode step
@@ -304,7 +413,7 @@ def make_sched_steps(cfg: ModelConfig, mesh=None, *, max_seq: int,
         cfg, mesh, act_bits=act_bits, attn_chunk=attn_chunk,
         extra_overrides=extra_overrides, kv_bits=kv_bits,
         kernel_backend=kernel_backend, decode_attn_chunk=decode_attn_chunk,
-        page_size=page_size)
+        page_size=page_size, tp_shard=tp_shard)
 
     def sched_decode_step(params, cache, tok, pos, active, ptab=None):
         write_pos = jnp.where(active, pos, max_seq)

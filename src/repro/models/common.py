@@ -68,6 +68,11 @@ class Ctx:
     # conservative bound for post-RoPE keys/values at unit-variance init)
     kv_bits: Optional[int] = None
     kv_scale: float = 0.05
+    # serve-time inner expert parallelism: the axis name of an ENCLOSING
+    # shard_map over which expert weights arrive pre-sliced (TP serving via
+    # launch.sharding.ServeSpec).  Mutually exclusive with ``ep_axis``,
+    # which builds its own shard_map from globally-replicated weights.
+    ep_inner: Optional[str] = None
     attn_chunk: int = 512
     remat: bool = False
     decode: bool = False

@@ -11,8 +11,9 @@ and runs a dense matmul, "pallas" runs the fused dequant-matmul kernel.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,30 @@ from repro.core.qtensor import QTensor, qmatmul
 # --------------------------------------------------------------------------
 
 KERNEL_BACKENDS = ("xla", "pallas")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PsumWeight:
+    """Marker wrapper for an input-channel-sharded weight inside shard_map.
+
+    The serve-time TP contract (``launch.sharding.ServeSpec``) splits
+    in-split linears (wo/w_down/cv) over their reduction dim; each shard's
+    partial matmul must be ``psum``'d over ``axis`` before anything nonlinear
+    consumes it.  Wrapping the weight keeps the family forwards free of
+    sharding logic: :func:`matmul` unwraps, multiplies the LOCAL shard, and
+    reduces — the one place the in-channel epilogue lives.  Registered as a
+    pytree (``axis`` is static aux) so wrapped weights flow through the
+    layer scan / ``take_layer`` like any stacked weight."""
+    w: Any
+    axis: str
+
+    def tree_flatten(self):
+        return ((self.w,), self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
 
 
 def resolve_backend(backend: Optional[str]) -> str:
@@ -44,6 +69,8 @@ def resolve_backend(backend: Optional[str]) -> str:
 
 
 def matmul(x: jax.Array, w, backend: Optional[str] = None) -> jax.Array:
+    if isinstance(w, PsumWeight):
+        return jax.lax.psum(matmul(x, w.w, backend), w.axis)
     if isinstance(w, QTensor):
         if resolve_backend(backend) == "pallas":
             from repro.kernels.ops import qtensor_matmul

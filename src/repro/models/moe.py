@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.qtensor import QTensor
 from repro.launch import mesh as mesh_mod
 from repro.models import layers as L
 from repro.models.common import Ctx
@@ -103,6 +104,25 @@ def moe_ffn(mp: dict, x: jax.Array, cfg: ModelConfig, ctx: Ctx) -> jax.Array:
     e, k = cfg.moe.num_experts, cfg.moe.top_k
     x2d = x.reshape(B * S, d)
     idx, gate = _route(x2d, mp["router"], k)
+
+    if ctx.ep_inner is not None:
+        # ---- inner expert parallelism: already inside a serve-time
+        # shard_map (launch.sharding.ServeSpec), expert weights arrive
+        # pre-sliced over ``ctx.ep_inner`` — no nested shard_map, just the
+        # local-expert compute + psum.  Routing stays over GLOBAL expert
+        # ids; capacity matches the TP=1 value (per-replica token count).
+        ax = ctx.ep_inner
+        wg = mp["w_gate"]
+        arr = wg.packed if isinstance(wg, QTensor) else wg
+        e_local = int(arr.shape[-3])
+        sid = jax.lax.axis_index(ax)
+        cap = _capacity(B * S, e, k, cfg.moe.capacity_factor)
+        y = _expert_compute(x2d, idx, gate, mp["w_gate"], mp["w_up"],
+                            mp["w_down"], e_start=sid * e_local,
+                            e_local=e_local, capacity=cap,
+                            act_bits=ctx.act_bits,
+                            backend=ctx.kernel_backend)
+        return jax.lax.psum(y, ax).reshape(B, S, d)
 
     if ctx.ep_axis is None:
         cap = _capacity(B * S, e, k, cfg.moe.capacity_factor)

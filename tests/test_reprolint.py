@@ -119,6 +119,38 @@ def test_jit_cache_flags_per_call_mesh_pr4_bug():
     assert "jit-cache" in rules_at(bad)
 
 
+def test_jit_cache_flags_serve_step_builder_in_loop():
+    # Shape 4: the serve-step builders return fresh (shard_map-wrapped)
+    # closures, so looping over configs/meshes through them recompiles
+    # per iteration — the memoized compile_* entry points are the guard.
+    bad = """
+    from pkg.launch.steps import make_sched_steps
+
+    def sweep(cfgs, mesh):
+        outs = []
+        for cfg in cfgs:
+            outs.append(make_sched_steps(cfg, mesh, tp_shard=True))
+        return outs
+    """
+    assert "jit-cache" in rules_at(bad)
+
+
+def test_jit_cache_accepts_memoized_compile_in_loop():
+    # compile_serve_steps/compile_sched_steps memoize per
+    # (cfg, backend, mesh, tp_shard) — looping over them is the blessed
+    # spelling and must pass.
+    good = """
+    from pkg.launch.scheduler import compile_sched_steps
+
+    def sweep(cfgs, mesh):
+        outs = []
+        for cfg in cfgs:
+            outs.append(compile_sched_steps(cfg, mesh, tp_shard=True))
+        return outs
+    """
+    assert "jit-cache" not in rules_at(good)
+
+
 def test_jit_cache_accepts_cache_get_guard():
     good = """
     import jax

@@ -11,9 +11,19 @@ HOT_ROOTS = {
     "launch/scheduler.py": {"serve_scheduled", "serve_lockstep"},
     "launch/serve.py": {"serve_requests"},
     "launch/steps.py": {"make_sched_steps", "make_serve_steps",
+                        "_make_tp_serve_steps",
                         "make_paged_install_step"},
     "core/recon_engine.py": {"ReconstructionEngine"},
 }
+
+# serve-step builders that construct fresh (shard_map-wrapped) step closures
+# per call: calling one inside a loop rebuilds and recompiles per iteration
+# (the PR 4 recompile class, reachable again via the serve `mesh=` plumbing).
+# compile_serve_steps / compile_sched_steps are memoized behind the
+# per-(cfg, backend, mesh, tp_shard) serve-step caches and deliberately
+# absent — they are the guard the rule points offenders at.
+SERVE_STEP_BUILDERS = {"make_serve_steps", "make_sched_steps",
+                       "_make_tp_serve_steps"}
 
 # calls that synchronize with (or copy to) the host
 SYNC_CALLS = {

@@ -1,13 +1,19 @@
-"""Compiled-artifact lint: lower the two hot programs and assert their
+"""Compiled-artifact lint: lower the hot programs and assert their
 optimized HLO honors the repo's transfer/collective contracts.
 
-Programs checked (both lowered from tiny reduced configs — lowering and
+Programs checked (all lowered from tiny reduced configs — lowering and
 compiling never executes them):
 
   * the scheduler's jitted ``sched_decode_step`` — the body of the timed
     decode loop.  Contract: ZERO host transfers (the static ``host-sync``
     rule keeps the *python* loop clean; this pins the compiled side), and
     no collectives at all when unsharded.
+  * the SAME decode step built with ``tp_shard=True`` on a
+    (data, model) serve mesh over W4g16 QTensor params.  Contract: zero
+    host transfers, and the only collective kind is ``all-reduce`` — the
+    in-channel psum epilogue (PsumWeight) plus the head-sharded attention
+    reduction.  Any all-gather/all-to-all means the serve sharding
+    contract leaked a reshard into the timed loop.
   * the sharded ``ReconstructionEngine`` scanned step on a data-parallel
     mesh.  Contract: zero host transfers, and the only collective kind is
     the ONE fused ``all-gather`` of per-shard chunk partials
@@ -50,6 +56,39 @@ def _sched_decode_hlo():
     active = jax.ShapeDtypeStruct((slots,), jax.numpy.bool_)
     lowered = jax.jit(decode).lower(params, cache, tok, pos, active)
     return lowered.compile().as_text()
+
+
+def _tp_sched_decode_hlo():
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.configs.base import QuantConfig
+    from repro.launch.mesh import serve_mesh
+    from repro.launch.steps import make_sched_steps, quantize_param_struct
+
+    n = len(jax.devices())
+    # llama2-7b (reduced): heads=4, kv=4 -> attention shards at tp=4 with
+    # W4g16, FFN (ng=11) falls back replicated — exercising both the psum
+    # epilogue and the per-group replication fallback in one program
+    tp = 4 if n % 4 == 0 else 1
+    mesh = serve_mesh(tp=tp, n_devices=n)
+    cfg = get_reduced_config("llama2-7b").replace(dtype="float32")
+    model, _, decode = make_sched_steps(cfg, mesh, max_seq=32, tp_shard=True)
+    slots = 4
+
+    def abstract(tree):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    params = quantize_param_struct(
+        params, cfg, QuantConfig(bits=4, group_size=16))
+    cache = abstract(jax.eval_shape(lambda: model.init_cache(slots, 32)))
+    i32 = jax.numpy.int32
+    tok = jax.ShapeDtypeStruct((slots,), i32)
+    pos = jax.ShapeDtypeStruct((slots,), i32)
+    active = jax.ShapeDtypeStruct((slots,), jax.numpy.bool_)
+    lowered = jax.jit(decode).lower(params, cache, tok, pos, active)
+    return lowered.compile().as_text(), tp
 
 
 def _recon_sharded_hlo():
@@ -96,6 +135,29 @@ def check_hlo() -> List[Violation]:
             "hlo-collective", _ANCHOR_SCHED, 1,
             f"unsharded sched_decode_step emits collectives {colls}; "
             f"expected none"))
+
+    hlo, tp = _tp_sched_decode_hlo()
+    n = host_transfer_ops(hlo)
+    if n:
+        out.append(Violation(
+            "hlo-host-transfer", _ANCHOR_SCHED, 1,
+            f"TP-sharded sched_decode_step compiles with {n} host-transfer "
+            f"op(s); the timed decode loop must stay on device under "
+            f"tensor parallelism too"))
+    colls = collective_op_counts(hlo)
+    extra = {k: v for k, v in colls.items() if k != "all-reduce"}
+    if extra:
+        out.append(Violation(
+            "hlo-collective", _ANCHOR_SCHED, 1,
+            f"TP-sharded sched_decode_step emits uncontracted collectives "
+            f"{extra}; the serve contract permits only the in-channel/"
+            f"attention all-reduce (launch.sharding.ServeSpec)"))
+    if tp > 1 and not colls.get("all-reduce", 0):
+        out.append(Violation(
+            "hlo-collective", _ANCHOR_SCHED, 1,
+            f"TP-sharded sched_decode_step (tp={tp}) emits no all-reduce; "
+            f"the in-channel psum epilogue (PsumWeight) is missing — the "
+            f"sharding contract is not engaged"))
 
     hlo, dp = _recon_sharded_hlo()
     n = host_transfer_ops(hlo)

@@ -1,6 +1,6 @@
 """Rule ``jit-cache``: jit/shard_map constructions that defeat the cache.
 
-Three shapes of the PR 4 bug class:
+Four shapes of the PR 4 bug class:
 
 1. ``jax.jit``/``shard_map`` constructed INSIDE a loop — a fresh traced
    callable (and a fresh compile) per iteration.
@@ -16,12 +16,19 @@ Three shapes of the PR 4 bug class:
    tracing cache, so every call recompiles — the exact 24x regression
    PR 4 debugged.  ``make_data_mesh``/``pod_submeshes`` return memoized
    meshes and are exempt.
+4. A serve-step BUILDER (``make_serve_steps``/``make_sched_steps``/
+   ``_make_tp_serve_steps``) invoked in a loop without a cache guard: each
+   call constructs fresh (possibly shard_map-wrapped) step closures, so
+   every iteration re-traces and recompiles — the same regression class
+   reachable again through the serving ``mesh=`` plumbing.  Go through
+   ``compile_serve_steps``/``compile_sched_steps`` instead: they memoize
+   per (cfg, backend, mesh, tp_shard) key.
 """
 from __future__ import annotations
 
 import ast
 
-from tools.reprolint.config import MESH_CONSTRUCTORS
+from tools.reprolint.config import MESH_CONSTRUCTORS, SERVE_STEP_BUILDERS
 from tools.reprolint.core import (FileContext, Violation, call_name,
                                   name_refs)
 
@@ -98,6 +105,23 @@ def check(ctx: FileContext):
                 f"`{call_name(n.func)}` constructed inside a loop: a fresh "
                 f"trace (and compile) every iteration; hoist it behind a "
                 f"keyed cache"))
+
+    # 4. serve-step builder invoked in a loop without a memoization guard
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = call_name(n.func)
+        if name and name.split(".")[-1] in SERVE_STEP_BUILDERS \
+                and ctx.in_loop(n) \
+                and ctx.enclosing_function(n) is not None \
+                and not _guarded(ctx, n, ctx.enclosing_function(n)):
+            out.append(Violation(
+                RULE, ctx.path, n.lineno,
+                f"serve-step builder `{name}` called inside a loop: each "
+                f"call builds fresh step closures (a re-trace and recompile "
+                f"per iteration); use compile_serve_steps/"
+                f"compile_sched_steps, which memoize per "
+                f"(cfg, backend, mesh, tp_shard)"))
 
     for fn in _functions(ctx):
         # jitted callables built per call of fn: name = jax.jit(...) or a
